@@ -1,0 +1,43 @@
+"""Paper Sec. II-A (communication load): FedADC's uplink equals FedAvg's;
+the downlink additionally carries the momentum/model-difference broadcast
+(2× naive, 1× when Δ̄-broadcast overlaps compute as the paper proposes).
+
+Analytic bytes/round per strategy for a chosen arch, plus the overlap
+accounting — this is the paper's own table, made concrete per architecture.
+"""
+import jax
+
+from benchmarks.common import emit
+from repro.configs import ARCHS
+
+
+def bytes_per_round(n_params, clients, dtype_bytes=4):
+    p = n_params * dtype_bytes
+    return {
+        # uplink: every selected client pushes Δ_i
+        "fedavg":        {"up": clients * p, "down": clients * p},
+        "slowmo":        {"up": clients * p, "down": clients * p},
+        # naive FedADC: pull θ_t AND m_t
+        "fedadc_naive":  {"up": clients * p, "down": clients * 2 * p},
+        # overlapped (paper): S_{t+1} pre-receives (θ_t, m_t) during round t
+        # compute; at t+1 only Δ̄_t is pulled on the critical path
+        "fedadc_overlap": {"up": clients * p, "down": clients * p},
+    }
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    for arch in ("qwen3-4b", "qwen3-14b"):
+        n = ARCHS[arch].param_count()
+        table = bytes_per_round(n, clients=4)
+        base = table["fedavg"]["down"]
+        for strat, t in table.items():
+            rows.append(emit(
+                f"comm.{arch}.{strat}", 0,
+                f"up_GB={t['up']/2**30:.2f};down_GB={t['down']/2**30:.2f};"
+                f"down_vs_fedavg={t['down']/base:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

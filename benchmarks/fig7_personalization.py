@@ -1,0 +1,58 @@
+"""Fig. 7: personalization via classifier calibration on top of FedADC+ —
+per-client local test accuracy vs the global model, with none/prox/KD head
+regularisers (paper: +3.3 – 4.1%)."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit, partitions, run_fl
+from repro.core.personalization import calibrate_head
+from repro.data.partition import class_counts
+
+ROUNDS = 50
+
+
+def main(rows=None):
+    data = dataset()
+    x, y, xt, yt = data
+    rows = rows if rows is not None else []
+    # fewer rounds + stronger skew: the paper's personalization gain needs
+    # a global model with per-client headroom (its CIFAR-100 global ~45%)
+    parts = partitions(y, 20, "dir", 0.1)
+    r = run_fl("fedadc", parts, data, rounds=20, eta=0.01, distill=True)
+    simr = r["sim"]
+    counts = class_counts(y, parts, 10)
+
+    # per-client local test split: sample test indices matching client's
+    # class distribution
+    rng = np.random.RandomState(0)
+    global_accs, pers_accs = {reg: [] for reg in ("none", "prox", "kd")}, {}
+    pers_accs = {reg: [] for reg in ("none", "prox", "kd")}
+    gaccs = []
+    for ci, p in enumerate(parts[:10]):
+        classes = np.unique(y[p])
+        te_mask = np.isin(yt, classes)
+        xte, yte = xt[te_mask], yt[te_mask]
+        if len(xte) == 0:
+            continue
+        logits = simr.apply(simr.params, jnp.asarray(xte))
+        gaccs.append(float(jnp.mean(jnp.argmax(logits, -1)
+                                    == jnp.asarray(yte))))
+        for reg in ("none", "prox", "kd"):
+            pp = calibrate_head(simr.params, simr.apply, "head",
+                                x[p], y[p], jnp.asarray(counts[ci]),
+                                steps=60, batch_size=32, eta=0.05, reg=reg)
+            logits = simr.apply(pp, jnp.asarray(xte))
+            pers_accs[reg].append(float(jnp.mean(
+                jnp.argmax(logits, -1) == jnp.asarray(yte))))
+    g = float(np.mean(gaccs))
+    rows.append(emit("fig7.global_model_local_acc", r["us_per_round"],
+                     f"{g:.3f}"))
+    for reg in ("none", "prox", "kd"):
+        pa = float(np.mean(pers_accs[reg]))
+        rows.append(emit(f"fig7.personalized.{reg}", 0, f"{pa:.3f}"))
+        rows.append(emit(f"fig7.gain.{reg}", 0, f"{pa - g:+.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

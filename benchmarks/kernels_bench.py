@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks: wall-µs per call (CPU interpret mode — the
+numbers gauge dispatch overhead, not TPU perf) plus DERIVED analytic
+bytes-moved / FLOPs per call, which are the hardware-independent terms the
+roofline uses."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                                  # compile/warm
+    t0 = time.time()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    # fused local update: 3 reads + 1 write vs 4 reads + 2 writes unfused
+    n = 1 << 20
+    theta = {"p": jnp.ones((n,), jnp.float32)}
+    g = {"p": jnp.full((n,), 0.1, jnp.float32)}
+    m = {"p": jnp.full((n,), 0.01, jnp.float32)}
+    us = _time(jax.jit(lambda t, gg, mm: ops.fedadc_local_update(
+        t, gg, mm, 0.05)), theta, g, m)
+    moved = 4 * n * 4
+    rows.append(emit("kernel.fedadc_local_update.1M", us,
+                     f"bytes_moved={moved};vs_unfused={6*n*4}"))
+
+    us = _time(jax.jit(lambda t, mm, d: ops.fedadc_server_update(
+        t, mm, d, 0.1, 0.05)), theta, m, g)
+    rows.append(emit("kernel.fedadc_server_update.1M", us,
+                     f"bytes_moved={5*n*4};vs_unfused={8*n*4}"))
+
+    # flash attention 1×4×512×64
+    B, H, L, D = 1, 4, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, L, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, L, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, L, H, D), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: ops.flash_attention(a, b, c)), q, k, v)
+    flops = 4 * B * H * L * L * D
+    rows.append(emit("kernel.flash_attention.512", us, f"flops={flops}"))
+
+    # ssd scan
+    b, Lq, Hh, P, N = 1, 512, 4, 64, 64
+    x = jax.random.normal(ks[0], (b, Lq, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, Lq, Hh)))
+    A_log = jnp.zeros((Hh,))
+    Bm = jax.random.normal(ks[2], (b, Lq, Hh, N))
+    Cm = jax.random.normal(ks[0], (b, Lq, Hh, N))
+    Dv = jnp.ones((Hh,))
+    us = _time(jax.jit(lambda *a: ops.ssd_scan(*a, chunk=128)),
+               x, dt, A_log, Bm, Cm, Dv)
+    chunk = 128
+    nc = Lq // chunk
+    intra = b * Hh * nc * (2 * chunk * chunk * N + 2 * chunk * chunk * P)
+    rows.append(emit("kernel.ssd_scan.512", us, f"flops~={intra}"))
+
+    # kd loss
+    Bb, C = 256, 1000
+    s = jax.random.normal(ks[0], (Bb, C))
+    t = jax.random.normal(ks[1], (Bb, C))
+    y = jax.random.randint(ks[2], (Bb,), 0, C)
+    rho = jax.random.uniform(ks[0], (C,))
+    us = _time(jax.jit(lambda *a: ops.kd_loss(*a, 0.35, 1.0)), s, t, y, rho)
+    rows.append(emit("kernel.kd_loss.256x1000", us,
+                     f"bytes_fused={2*Bb*C*4};vs_unfused~={5*2*Bb*C*4}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

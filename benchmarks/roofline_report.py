@@ -1,0 +1,42 @@
+"""Aggregate the dry-run roofline baselines (results/baseline_*.jsonl) into
+the §Roofline table: three terms, dominant bottleneck, MODEL_FLOPS ratio."""
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = [("singlepod", "results/baseline_singlepod.jsonl"),
+           ("multipod", "results/baseline_multipod.jsonl")]
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    rows = []
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"])] = r     # last write wins
+    return list(seen.values())
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    for mesh_name, path in RESULTS:
+        for r in load(path):
+            key = f"roofline.{mesh_name}.{r['arch']}.{r['shape']}"
+            if r["status"] != "ok":
+                rows.append(emit(key, 0, f"status={r['status']}"))
+                continue
+            dom = r["dominant"]
+            derived = (f"dom={dom};compute_s={r['compute_s']:.3g};"
+                       f"memory_s={r['memory_s']:.3g};"
+                       f"collective_s={r['collective_s']:.3g};"
+                       f"hbm_gb={r['per_device_hbm_gb']:.2f};"
+                       f"useful={min(r.get('useful_flop_frac', 0), 99):.2f}")
+            rows.append(emit(key, r["t_compile_s"] * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+  fig1_acceleration  — Fig. 1 a-c  (FedADC vs FedAvg vs SlowMo, s=2,3,4)
+  fig2_robustness    — Fig. 2      (FedADC robustness to skew; red vs blue)
+  table1_sota        — Table I     (vs MOON/FedGKD/FedNTD/FedDyn/FedProx/
+                                     SCAFFOLD/FedRS, 2 regimes)
+  fig5_scale         — Fig. 5/6    (low participation, many clients)
+  fig7_personalization — Fig. 7    (classifier calibration, 3 regularisers)
+  clustering         — Sec. IV-E   (class-coverage client selection)
+  kernels_bench      — Pallas kernels µs/call + derived bytes/flops
+  roofline_report    — §Roofline terms per (arch × shape × mesh) from the
+                       dry-run artifacts
+"""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_beta, clustering, comm_load,
+                            fig1_acceleration, fig2_robustness, fig5_scale,
+                            fig7_personalization, kernels_bench, lm_round,
+                            roofline_report, table1_sota)
+    mods = {
+        "kernels_bench": kernels_bench,
+        "comm_load": comm_load,
+        "roofline_report": roofline_report,
+        "fig1_acceleration": fig1_acceleration,
+        "fig2_robustness": fig2_robustness,
+        "table1_sota": table1_sota,
+        "fig5_scale": fig5_scale,
+        "fig7_personalization": fig7_personalization,
+        "clustering": clustering,
+        "lm_round": lm_round,
+        "ablation_beta": ablation_beta,
+    }
+    picked = (args.only.split(",") if args.only else list(mods))
+    print("name,us_per_call,derived")
+    rows = []
+    for name in picked:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mods[name].main(rows)
+        except Exception as e:  # pragma: no cover - keep harness robust
+            print(f"{name},0,ERROR:{e!r}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    print(f"# total rows: {len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

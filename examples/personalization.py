@@ -1,0 +1,55 @@
+"""Personalization via classifier calibration (paper Sec. IV-D / Fig. 7):
+train FedADC+ globally, then calibrate each client's head locally with the
+self-confidence KD regulariser and compare per-client accuracy.
+
+Run:  PYTHONPATH=src python examples/personalization.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core.personalization import calibrate_head
+from repro.data.partition import class_counts, dirichlet_partition
+from repro.data.synthetic import make_image_dataset
+from repro.federated.simulator import FederatedSimulator, SimConfig
+
+
+def main():
+    x, y, xt, yt = make_image_dataset(3000, 600, 10, image_size=16,
+                                      noise=0.6, seed=0)
+    parts = dirichlet_partition(y, 20, alpha=0.1, seed=0)
+    fed = FedConfig(strategy="fedadc", local_steps=8, clients_per_round=4,
+                    n_clients=20, eta=0.01, beta_global=0.7, beta_local=0.7,
+                    distill=True)
+    sim = SimConfig(model="cnn", n_classes=10, batch_size=32, rounds=20,
+                    eval_every=20, cnn_width=8)
+    s = FederatedSimulator(fed, sim, x, y, xt, yt, parts)
+    s.run()
+    counts = class_counts(y, parts, 10)
+
+    print(f"{'client':>6} {'global':>8} {'personal':>9} {'gain':>7}")
+    gains = []
+    for ci, p in enumerate(parts[:8]):
+        classes = np.unique(y[p])
+        mask = np.isin(yt, classes)
+        xte, yte = xt[mask], yt[mask]
+        if not len(xte):
+            continue
+
+        def acc(params):
+            logits = s.apply(params, jnp.asarray(xte))
+            return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte)))
+        g = acc(s.params)
+        pp = calibrate_head(s.params, s.apply, "head", x[p], y[p],
+                            jnp.asarray(counts[ci]), steps=60, batch_size=32,
+                            eta=0.05, reg="kd")
+        pa = acc(pp)
+        gains.append(pa - g)
+        print(f"{ci:>6} {g:>8.3f} {pa:>9.3f} {pa-g:>+7.3f}")
+    print(f"\nmean gain: {np.mean(gains):+.3f} "
+          f"(paper: +3.3–4.1% on CIFAR-100; calibration is repeatable when "
+          f"local statistics change)")
+
+
+if __name__ == "__main__":
+    main()

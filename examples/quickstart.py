@@ -1,0 +1,41 @@
+"""Quickstart: FedADC vs FedAvg on a non-iid federation in ~2 minutes (CPU).
+
+Reproduces the paper's core claim in miniature: under skewed client data
+(sort-and-partition, s=2), embedding the server momentum into the local
+iterations both accelerates training and controls client drift.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.base import FedConfig
+from repro.data.partition import sort_and_partition
+from repro.data.synthetic import make_image_dataset
+from repro.federated.simulator import FederatedSimulator, SimConfig
+
+
+def main():
+    x, y, xt, yt = make_image_dataset(3000, 600, n_classes=10,
+                                      image_size=16, noise=0.6, seed=0)
+    parts = sort_and_partition(y, n_clients=20, s=2, seed=0)
+    sim = SimConfig(model="cnn", n_classes=10, batch_size=32, rounds=40,
+                    eval_every=10, cnn_width=8)
+    print(f"{'round':>6} " + "".join(f"{s:>10}" for s in
+                                     ("fedavg", "fedadc")))
+    histories = {}
+    for strat, eta in (("fedavg", 0.05), ("fedadc", 0.01)):
+        fed = FedConfig(strategy=strat, local_steps=8, clients_per_round=4,
+                        n_clients=20, eta=eta, beta_global=0.7,
+                        beta_local=0.7)
+        s = FederatedSimulator(fed, sim, x, y, xt, yt, parts)
+        histories[strat] = s.run()
+    for i, h in enumerate(histories["fedavg"]):
+        row = f"{h['round']:>6} "
+        for strat in ("fedavg", "fedadc"):
+            row += f"{histories[strat][i]['acc']:>10.3f}"
+        print(row)
+    final = {s: h[-1]["acc"] for s, h in histories.items()}
+    print(f"\nFedADC − FedAvg = {final['fedadc'] - final['fedavg']:+.3f} "
+          f"(paper: FedADC > FedAvg, gap grows with skew)")
+
+
+if __name__ == "__main__":
+    main()

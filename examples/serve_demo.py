@@ -1,0 +1,64 @@
+"""Serve a (reduced) assigned architecture with batched requests: prefill a
+batch of prompts, then decode with the single-token serve_step against the
+KV/state cache — the same program the decode_32k / long_500k dry-runs lower
+for the production mesh.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py [--arch zamba2-1.2b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.registry import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-1.2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+
+    rng = np.random.RandomState(0)
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, P)), jnp.int32)
+
+    decode = jax.jit(
+        lambda p, c, t, pos: model.decode_step(p, c, t, pos, cfg))
+    cache = model.init_cache(cfg, B, max_len, jnp.float32)
+
+    # prefill via incremental decode (state/ring caches make this uniform
+    # across attention, MLA, Mamba2 and xLSTM archs)
+    t0 = time.time()
+    logits = None
+    for t in range(P):
+        logits, cache = decode(params, cache, prompts[:, t:t + 1],
+                               jnp.asarray(t, jnp.int32))
+    print(f"{args.arch}-reduced: prefill {P} tokens × {B} seqs "
+          f"in {time.time()-t0:.2f}s")
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for t in range(P, P + G):
+        logits, cache = decode(params, cache, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {G} tokens/seq in {dt:.2f}s "
+          f"({B*G/dt:.1f} tok/s greedy); sample row: {gen[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

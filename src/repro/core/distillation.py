@@ -1,0 +1,109 @@
+"""Self-knowledge-distillation losses (Sec. III).
+
+Implements the paper's *self-confidence knowledge distillation* (FedADC+,
+eqs. (6)-(9)) plus the two baselines it generalises:
+
+* FedGKD  — KL(student ‖ global-teacher) over all classes.
+* FedNTD  — KL over the NOT-TRUE classes only.
+* self-confidence (ours/paper) — the teacher's probabilities are reweighted
+  per class by (1 − ρ_{i,k}) where ρ_{i,k} = γ_{i,k}/γ_k^max encodes how
+  well class i is represented in client k's local data; the true class
+  absorbs the leftover mass (eqs. (8),(9)).  When data is iid, ρ≈1 and the
+  loss degrades to plain CE — the paper's adaptivity argument.
+
+All functions operate on logits so they serve both the vision simulator
+(class logits) and the pod LM engine (vocab logits; γ = token frequencies).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_T(logits, tau):
+    return jax.nn.softmax(logits.astype(jnp.float32) / tau, axis=-1)
+
+
+def kl_loss(p_student_logits, target_probs, tau):
+    """Eq. (6): L_KL(p, p̂) = −Σ p̂_i log(p_i/p̂_i).  Mean over batch."""
+    logp = jax.nn.log_softmax(p_student_logits.astype(jnp.float32) / tau, -1)
+    t = jnp.clip(target_probs, 1e-9, 1.0)
+    kl = jnp.sum(t * (jnp.log(t) - logp), axis=-1)
+    return jnp.mean(kl) * (tau ** 2)
+
+
+def cross_entropy(logits, labels):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def class_confidence(class_counts):
+    """ρ_{i,k} = γ_{i,k} / γ_k^max   (eq. before (8)).  counts (C,)."""
+    gamma = class_counts / jnp.maximum(class_counts.sum(), 1.0)
+    return gamma / jnp.maximum(gamma.max(), 1e-9)
+
+
+def self_confidence_targets(teacher_logits, labels, rho, tau):
+    """Eqs. (8),(9): build p̂ from the (global-model) teacher prediction and
+    the local confidence vector ρ (C,).  labels (B,) int."""
+    p_t = softmax_T(teacher_logits, tau)                     # (B, C)
+    onehot = jax.nn.one_hot(labels, p_t.shape[-1], dtype=p_t.dtype)
+    damp = (1.0 - rho)[None, :] * p_t                        # (1-ρ_i)·p̃^(i)
+    non_true = damp * (1.0 - onehot)                         # eq. (8)
+    true_mass = 1.0 - non_true.sum(-1, keepdims=True)        # eq. (9)
+    return non_true + onehot * true_mass
+
+
+def self_confidence_kd_loss(student_logits, teacher_logits, labels,
+                            class_counts, lam, tau):
+    """Eq. (7) with the self-confidence target — the FedADC+ objective."""
+    rho = class_confidence(class_counts)
+    targets = self_confidence_targets(teacher_logits, labels, rho, tau)
+    ce = cross_entropy(student_logits, labels)
+    kd = kl_loss(student_logits, jax.lax.stop_gradient(targets), tau)
+    return (1.0 - lam) * ce + lam * kd, {"ce": ce, "kd": kd}
+
+
+def fedgkd_loss(student_logits, teacher_logits, labels, lam, tau):
+    ce = cross_entropy(student_logits, labels)
+    kd = kl_loss(student_logits,
+                 jax.lax.stop_gradient(softmax_T(teacher_logits, tau)), tau)
+    return ce + lam * kd, {"ce": ce, "kd": kd}
+
+
+def fedntd_loss(student_logits, teacher_logits, labels, beta, tau):
+    """KL over not-true classes only (teacher & student renormalised after
+    masking the true class)."""
+    C = student_logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, C, dtype=jnp.float32)
+    mask = 1.0 - onehot
+    s = student_logits.astype(jnp.float32) / tau + jnp.log(mask + 1e-30)
+    t = teacher_logits.astype(jnp.float32) / tau + jnp.log(mask + 1e-30)
+    p_t = jax.nn.softmax(t, -1)
+    logp_s = jax.nn.log_softmax(s, -1)
+    kl = jnp.sum(jnp.where(mask > 0, p_t * (jnp.log(jnp.clip(p_t, 1e-9))
+                                            - logp_s), 0.0), -1)
+    ce = cross_entropy(student_logits, labels)
+    return ce + beta * jnp.mean(kl) * tau ** 2, {"ce": ce, "kd": jnp.mean(kl)}
+
+
+def fedrs_logits(logits, class_present, alpha):
+    """FedRS restricted softmax: scale logits of classes ABSENT from the
+    client's data by α before CE.  class_present (C,) in {0,1}."""
+    scale = class_present + (1.0 - class_present) * alpha
+    return logits * scale[None, :]
+
+
+def moon_loss(z, z_glob, z_prev, mu, temperature):
+    """MOON model-contrastive term: positive = global-model features,
+    negative = previous-local-model features."""
+    def _cos(a, b):
+        a = a / jnp.maximum(jnp.linalg.norm(a, axis=-1, keepdims=True), 1e-9)
+        b = b / jnp.maximum(jnp.linalg.norm(b, axis=-1, keepdims=True), 1e-9)
+        return jnp.sum(a * b, -1)
+    pos = _cos(z, z_glob) / temperature
+    neg = _cos(z, z_prev) / temperature
+    return mu * jnp.mean(-pos + jax.nn.logsumexp(
+        jnp.stack([pos, neg], -1), axis=-1))

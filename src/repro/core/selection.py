@@ -1,0 +1,54 @@
+"""Client selection (Sec. IV-E further discussion).
+
+* ``random``          — uniform sampling of cN clients (FedAvg default).
+* ``class_coverage``  — data-aware selection: random subsets rejected until
+  the union of the selected clients' data covers every class, mitigating the
+  momentum bias the paper describes for small participation ratios
+  (reported +2.1% final accuracy on CIFAR-10 s=2, C=0.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def random_selection(rng: np.random.RandomState, n_clients: int,
+                     n_pick: int) -> np.ndarray:
+    return rng.choice(n_clients, size=n_pick, replace=False)
+
+
+def class_coverage_selection(rng: np.random.RandomState, n_clients: int,
+                             n_pick: int, counts: np.ndarray,
+                             max_tries: int = 200) -> np.ndarray:
+    """counts (n_clients, n_classes).  Rejection-sample until every class is
+    present in the union; greedy-repair on failure."""
+    n_classes = counts.shape[1]
+    best, best_cov = None, -1
+    for _ in range(max_tries):
+        pick = rng.choice(n_clients, size=n_pick, replace=False)
+        cov = int((counts[pick].sum(0) > 0).sum())
+        if cov == n_classes:
+            return pick
+        if cov > best_cov:
+            best, best_cov = pick, cov
+    # greedy repair: swap in clients that add missing classes
+    pick = list(best)
+    missing = set(np.where(counts[pick].sum(0) == 0)[0])
+    outside = [c for c in range(n_clients) if c not in pick]
+    rng.shuffle(outside)
+    for cand in outside:
+        if not missing:
+            break
+        gain = missing & set(np.where(counts[cand] > 0)[0])
+        if gain:
+            # replace the member whose removal loses no class
+            for j, m in enumerate(pick):
+                rest = pick[:j] + pick[j + 1:] + [cand]
+                if (counts[rest].sum(0) > 0).sum() >= best_cov:
+                    pick = rest
+                    missing -= gain
+                    break
+    return np.array(pick[:n_pick])
+
+
+SELECTORS = {"random": random_selection,
+             "class_coverage": class_coverage_selection}

@@ -1,0 +1,61 @@
+"""Pytree algebra used by every FL strategy (params, momenta, deltas are all
+the same pytree structure as the model parameters)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros_like(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def scale(t, s):
+    return jax.tree.map(lambda x: x * s, t)
+
+
+def axpy(a, x, y):
+    """a*x + y."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def lerp(a, b, w):
+    """(1-w)*a + w*b."""
+    return jax.tree.map(lambda ai, bi: (1 - w) * ai + w * bi, a, b)
+
+
+def dot(a, b):
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)),
+        a, b))
+    return jnp.sum(jnp.stack(leaves))
+
+
+def sq_norm(t):
+    return dot(t, t)
+
+
+def global_norm(t):
+    return jnp.sqrt(sq_norm(t))
+
+
+def clip_by_global_norm(t, max_norm):
+    n = global_norm(t)
+    s = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return scale(t, s)
+
+
+def cast(t, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), t)
+
+
+def tree_size(t) -> int:
+    return sum(x.size for x in jax.tree.leaves(t))

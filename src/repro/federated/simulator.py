@@ -1,0 +1,246 @@
+"""Paper-scale federated simulator (host round loop, jit'd client updates).
+
+Reproduces the paper's experimental setup: N clients with non-iid partitions
+(sort-and-partition or Dirichlet), cN sampled per round, H local SGD steps,
+then the strategy's server update.  Selected clients are vmapped into a
+single jit call per round.  Stateful-client strategies (SCAFFOLD, FedDyn,
+MOON) keep their per-client state in a host-side numpy store.
+
+This engine runs the paper's CNN / ResNet-18 experiments; the pod-scale
+engine in ``repro.launch.train`` runs the assigned big architectures.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.core import distillation as D
+from repro.core import tree as T
+from repro.core.selection import SELECTORS
+from repro.core.strategies import get_strategy
+from repro.data.partition import class_counts
+from repro.models.vision import VISION_MODELS
+
+
+@dataclass
+class SimConfig:
+    model: str = "cnn"
+    n_classes: int = 10
+    batch_size: int = 64
+    rounds: int = 100
+    eval_every: int = 5
+    eval_batch: int = 512
+    selector: str = "random"
+    moon_mu: float = 1.0
+    moon_temp: float = 0.5
+    fedrs_alpha: float = 0.5
+    fedgkd_lambda: float = 0.1
+    fedgkd_tau: float = 0.5
+    fedntd_beta: float = 0.3
+    fedntd_tau: float = 1.0
+    seed: int = 0
+    cnn_width: int = 32
+
+
+class FederatedSimulator:
+    def __init__(self, fed: FedConfig, sim: SimConfig,
+                 x_train, y_train, x_test, y_test,
+                 parts: List[np.ndarray]):
+        self.fed, self.sim = fed, sim
+        self.x_train, self.y_train = x_train, y_train
+        self.x_test, self.y_test = x_test, y_test
+        self.parts = parts
+        self.n_clients = len(parts)
+        self.rng = np.random.RandomState(sim.seed)
+        self.counts = class_counts(y_train, parts, sim.n_classes)
+
+        init, apply, features, head_key = VISION_MODELS[sim.model]
+        if sim.model == "cnn":
+            init = functools.partial(init, n_classes=sim.n_classes,
+                                     width=sim.cnn_width,
+                                     image_size=x_train.shape[1])
+        else:
+            init = functools.partial(init, n_classes=sim.n_classes)
+        self.apply, self.features = apply, features
+        self.params = init(jax.random.PRNGKey(sim.seed))
+        self.strategy = get_strategy(fed.strategy)
+        self.server_state = self.strategy.server_init(self.params)
+        self.needs_teacher = fed.distill or fed.strategy in ("fedgkd", "fedntd")
+        self.stateful = not getattr(self.strategy, "stateless_clients", True) \
+            or fed.strategy == "moon"
+        self.client_states: Dict[int, object] = {}
+        self._round_fn = jax.jit(self._make_round_fn())
+        self._eval_fn = jax.jit(self._make_eval_fn())
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _client_state_init(self):
+        s, fed = self.strategy, self.fed
+        if fed.strategy == "moon":
+            return {"prev": self.params}
+        if hasattr(s, "client_state_init"):
+            return s.client_state_init(self.params)
+        return {"_": jnp.zeros(())}
+
+    def _get_client_states(self, picks):
+        states = [self.client_states.get(int(c)) or self._client_state_init()
+                  for c in picks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    def _put_client_states(self, picks, stacked):
+        for j, c in enumerate(picks):
+            self.client_states[int(c)] = jax.tree.map(lambda x: x[j], stacked)
+
+    # ------------------------------------------------------------------
+    def _local_loss(self, theta, xb, yb, theta_t, counts, cstate):
+        """The strategy-specific local objective (Sec. III / IV-A)."""
+        fed, sim = self.fed, self.sim
+        name = fed.strategy
+        logits = self.apply(theta, xb)
+        if fed.distill:   # FedADC+ self-confidence KD (eq. 7-9)
+            t_logits = jax.lax.stop_gradient(self.apply(theta_t, xb))
+            loss, aux = D.self_confidence_kd_loss(
+                logits, t_logits, yb, counts, fed.distill_lambda,
+                fed.distill_tau)
+            return loss
+        if name == "fedgkd":
+            t_logits = jax.lax.stop_gradient(self.apply(theta_t, xb))
+            return D.fedgkd_loss(logits, t_logits, yb, sim.fedgkd_lambda,
+                                 sim.fedgkd_tau)[0]
+        if name == "fedntd":
+            t_logits = jax.lax.stop_gradient(self.apply(theta_t, xb))
+            return D.fedntd_loss(logits, t_logits, yb, sim.fedntd_beta,
+                                 sim.fedntd_tau)[0]
+        if name == "fedrs":
+            present = (counts > 0).astype(jnp.float32)
+            return D.cross_entropy(D.fedrs_logits(logits, present,
+                                                  sim.fedrs_alpha), yb)
+        if name == "moon":
+            z = self.features(theta, xb)
+            z_g = jax.lax.stop_gradient(self.features(theta_t, xb))
+            z_p = jax.lax.stop_gradient(self.features(cstate["prev"], xb))
+            return D.cross_entropy(logits, yb) + D.moon_loss(
+                z, z_g, z_p, sim.moon_mu, sim.moon_temp)
+        return D.cross_entropy(logits, yb)
+
+    # ------------------------------------------------------------------
+    def _make_round_fn(self):
+        strategy, fed = self.strategy, self.fed
+
+        def client_update(theta_t, ctx, xb, yb, counts, cstate):
+            """xb (H,b,...), yb (H,b) -> (delta, new_cstate, loss_mean)."""
+            def grad_builder(batch_x, batch_y):
+                def loss(theta):
+                    return self._local_loss(theta, batch_x, batch_y,
+                                            theta_t, counts, cstate)
+                return loss
+
+            def step(carry, hb):
+                theta, extra = carry
+                bx, by = hb
+
+                def grad_fn(th, _):
+                    val, g = jax.value_and_grad(grad_builder(bx, by))(th)
+                    return g, val
+                theta, extra, val = strategy.local_step(
+                    theta, ctx, grad_fn, None, fed, extra)
+                return (theta, extra), val
+
+            # stateful-client strategies (SCAFFOLD c_i, FedDyn h_i) carry
+            # their cross-round state through the local-step `extra` slot
+            if hasattr(strategy, "client_state_init"):
+                extra0 = cstate
+            else:
+                extra0 = strategy.init_extra(theta_t, fed)
+            (theta_H, _), losses = jax.lax.scan(step, (theta_t, extra0),
+                                                (xb, yb))
+            delta = T.sub(theta_t, theta_H)
+            new_cstate = cstate
+            if hasattr(strategy, "client_state_update"):
+                new_cstate = strategy.client_state_update(
+                    cstate, ctx, theta_t, theta_H, fed)
+            elif fed.strategy == "moon":
+                new_cstate = {"prev": theta_H}
+            return delta, new_cstate, jnp.mean(losses), theta_H
+
+        def round_fn(params, server_state, xb, yb, counts, cstates):
+            ctx = strategy.client_setup(server_state, params, fed)
+            deltas, ncs, losses, theta_Hs = jax.vmap(
+                lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
+            )(xb, yb, counts, cstates)
+            mean_delta = jax.tree.map(lambda d: jnp.mean(d, 0), deltas)
+            if fed.strategy == "feddyn":
+                mean_theta_H = jax.tree.map(lambda d: jnp.mean(d, 0), theta_Hs)
+                sum_drift = jax.tree.map(
+                    lambda d: -jnp.sum(d, 0) / self.n_clients, deltas)
+                new_params, new_ss = strategy.server_update_feddyn(
+                    server_state, params, mean_theta_H, sum_drift, fed)
+            elif fed.strategy == "scaffold":
+                dcs = jax.tree.map(lambda a, b: a - b, ncs, cstates)
+                mean_dc = jax.tree.map(lambda d: jnp.mean(d, 0), dcs)["c_i"]
+                part_frac = xb.shape[0] / self.n_clients
+                new_params, new_ss = strategy.server_update_scaffold(
+                    server_state, params, mean_delta, mean_dc, fed, part_frac)
+            else:
+                new_params, new_ss = strategy.server_update(
+                    server_state, params, mean_delta, fed)
+            return new_params, new_ss, ncs, jnp.mean(losses)
+
+        return round_fn
+
+    def _make_eval_fn(self):
+        def eval_fn(params, x, y):
+            logits = self.apply(params, x)
+            return jnp.sum(jnp.argmax(logits, -1) == y)
+        return eval_fn
+
+    # ------------------------------------------------------------------
+    def _client_batches(self, client: int):
+        fed, sim = self.fed, self.sim
+        idx = self.parts[client]
+        need = fed.local_steps * sim.batch_size
+        reps = int(np.ceil(need / len(idx)))
+        pool = np.concatenate([self.rng.permutation(idx) for _ in range(reps)])
+        sel = pool[:need].reshape(fed.local_steps, sim.batch_size)
+        return self.x_train[sel], self.y_train[sel]
+
+    def evaluate(self) -> float:
+        n, correct = len(self.x_test), 0
+        b = self.sim.eval_batch
+        for i in range(0, n, b):
+            correct += int(self._eval_fn(self.params,
+                                         jnp.asarray(self.x_test[i:i + b]),
+                                         jnp.asarray(self.y_test[i:i + b])))
+        return correct / n
+
+    def run(self, rounds: Optional[int] = None, log_fn: Callable = None):
+        rounds = rounds or self.sim.rounds
+        sel = SELECTORS[self.sim.selector]
+        for t in range(rounds):
+            if self.sim.selector == "random":
+                picks = sel(self.rng, self.n_clients, self.fed.clients_per_round)
+            else:
+                picks = sel(self.rng, self.n_clients,
+                            self.fed.clients_per_round, self.counts)
+            xs, ys = zip(*[self._client_batches(int(c)) for c in picks])
+            xb = jnp.asarray(np.stack(xs))
+            yb = jnp.asarray(np.stack(ys))
+            counts = jnp.asarray(self.counts[picks])
+            cstates = self._get_client_states(picks)
+            self.params, self.server_state, ncs, loss = self._round_fn(
+                self.params, self.server_state, xb, yb, counts, cstates)
+            if self.stateful:
+                self._put_client_states(picks, ncs)
+            if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:
+                acc = self.evaluate()
+                self.history.append({"round": t + 1, "acc": acc,
+                                     "loss": float(loss)})
+                if log_fn:
+                    log_fn(self.history[-1])
+        return self.history

@@ -1,0 +1,73 @@
+"""Fused FedADC update kernels (the paper's per-step hot spot).
+
+Every local iteration touches the full parameter vector three times
+(read θ, read g, read m̄) and writes once; the server update reads three
+and writes two.  Unfused, XLA materialises the intermediate (g + m̄) in HBM.
+These kernels fuse the AXPY chains into single VMEM-resident passes —
+arithmetic intensity is tiny (<1 flop/byte) so the win is purely removing
+redundant HBM traffic (~33% fewer bytes on the local step, ~40% on the
+server step).
+
+Tensors are processed as flattened (rows, 128) tiles; the ops.py wrapper
+pads each leaf to a lane-aligned size, so kernels only ever see
+hardware-aligned blocks (8×128 float32 VREG tiles on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 512          # 512×128 fp32 = 256 KiB per operand in VMEM
+
+
+def _axpy_kernel(x_ref, y_ref, o_ref, *, a):
+    o_ref[...] = x_ref[...] + a * y_ref[...]
+
+
+def _local_update_kernel(theta_ref, g_ref, mbar_ref, o_ref, *, eta):
+    # θ' = θ − η·(g + m̄)   — one pass, no HBM intermediate
+    o_ref[...] = theta_ref[...] - eta * (g_ref[...] + mbar_ref[...])
+
+
+def _server_update_kernel(theta_ref, m_ref, delta_ref, theta_o, m_o, *,
+                          gamma, alpha_eta):
+    # m' = Δ̄ + γ·m ; θ' = θ − αη·m'
+    m_new = delta_ref[...] + gamma * m_ref[...]
+    m_o[...] = m_new
+    theta_o[...] = theta_ref[...] - alpha_eta * m_new
+
+
+def _tiled_call(kernel, arrays, n_out, interpret, **kw):
+    """arrays: same-shape 2D (rows, LANE) operands."""
+    rows = arrays[0].shape[0]
+    block = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, block),)
+    spec = pl.BlockSpec((block, LANE), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct(arrays[0].shape, arrays[0].dtype)
+                 for _ in range(n_out)]
+    return pl.pallas_call(
+        functools.partial(kernel, **kw),
+        grid=grid,
+        in_specs=[spec] * len(arrays),
+        out_specs=[spec] * n_out if n_out > 1 else spec,
+        out_shape=out_shape if n_out > 1 else out_shape[0],
+        interpret=interpret,
+    )(*arrays)
+
+
+def fused_axpy_2d(x, y, a, interpret=False):
+    return _tiled_call(_axpy_kernel, [x, y], 1, interpret, a=a)
+
+
+def local_update_2d(theta, g, m_bar, eta, interpret=False):
+    return _tiled_call(_local_update_kernel, [theta, g, m_bar], 1,
+                       interpret, eta=eta)
+
+
+def server_update_2d(theta, m, delta_bar, gamma, alpha_eta, interpret=False):
+    return _tiled_call(_server_update_kernel, [theta, m, delta_bar], 2,
+                       interpret, gamma=gamma, alpha_eta=alpha_eta)

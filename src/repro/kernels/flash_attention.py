@@ -1,0 +1,112 @@
+"""Causal flash attention (GQA + optional sliding window) as a Pallas TPU
+kernel.
+
+TPU adaptation of the FlashAttention blocking: the grid is
+(batch·heads, q_blocks, k_blocks) with the K dimension innermost — on TPU
+the grid is executed sequentially per core, so the online-softmax running
+state (m, l, acc) lives in VMEM scratch carried across the k iterations of
+one (bh, q) cell.  Block shapes are MXU-aligned (multiples of 128 on the
+contracting dim).  Out-of-window / non-causal K blocks are skipped with
+``pl.when`` so the sliding-window variant does O(L·W) work, which is what
+makes the long_500k dense variants sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_k, n_kb, causal, window):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # visibility: causal → need k_start <= q_end; window → k_end > q_start-window
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, D)
+        s = q @ k.T                                       # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        corr = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[...] = m_cur
+
+    @pl.when(ki == n_kb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """q (B,H,L,D); k/v (B,Hk,L,D) -> (B,H,L,D)."""
+    B, H, Lq, D = q.shape
+    Hk = k.shape[1]
+    group = H // Hk
+    scale = D ** -0.5
+    block_q = min(block_q, Lq)
+    block_k = min(block_k, Lq)
+    n_qb = pl.cdiv(Lq, block_q)
+    n_kb = pl.cdiv(Lq, block_k)
+
+    qr = q.reshape(B * H, Lq, D)
+    kr = k.reshape(B * Hk, Lq, D)
+    vr = v.reshape(B * Hk, Lq, D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kb=n_kb, causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Lq, D)

@@ -1,0 +1,103 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends every kernel runs in ``interpret=True`` mode (the body
+executes as plain JAX on CPU) so the whole framework stays runnable and
+testable in this container; on TPU the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fedadc_update as _fu
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kd_loss as _kd
+from repro.kernels import ssd_scan as _ssd
+
+LANE = _fu.LANE
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# elementwise fused updates — applied leaf-wise over parameter pytrees
+# ---------------------------------------------------------------------------
+def _as_tiles(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % LANE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANE), pad
+
+
+def _from_tiles(t, pad, shape, dtype):
+    flat = t.reshape(-1)
+    if pad:
+        flat = flat[:flat.size - pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def fused_axpy(x, y, a):
+    """x + a·y on a single leaf."""
+    xt, pad = _as_tiles(x)
+    yt, _ = _as_tiles(y.astype(x.dtype))
+    out = _fu.fused_axpy_2d(xt, yt, a, interpret=_interpret())
+    return _from_tiles(out, pad, x.shape, x.dtype)
+
+
+def fedadc_local_update(theta, g, m_bar, eta):
+    """θ − η(g + m̄) over a whole pytree."""
+    def leaf(t, gi, mi):
+        tt, pad = _as_tiles(t)
+        gt, _ = _as_tiles(gi.astype(t.dtype))
+        mt, _ = _as_tiles(mi.astype(t.dtype))
+        out = _fu.local_update_2d(tt, gt, mt, eta, interpret=_interpret())
+        return _from_tiles(out, pad, t.shape, t.dtype)
+    return jax.tree.map(leaf, theta, g, m_bar)
+
+
+def fedadc_server_update(theta, m, delta_bar, gamma, alpha_eta):
+    """(θ', m') fused server update over a whole pytree."""
+    def leaf(t, mi, di):
+        tt, pad = _as_tiles(t)
+        mt, _ = _as_tiles(mi.astype(t.dtype))
+        dt, _ = _as_tiles(di.astype(t.dtype))
+        to, mo = _fu.server_update_2d(tt, mt, dt, gamma, alpha_eta,
+                                      interpret=_interpret())
+        return (_from_tiles(to, pad, t.shape, t.dtype),
+                _from_tiles(mo, pad, t.shape, t.dtype))
+    pairs = jax.tree.map(leaf, theta, m, delta_bar)
+    theta_new = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return theta_new, m_new
+
+
+# ---------------------------------------------------------------------------
+# attention / ssd / kd
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, causal=True, window=0, block_q=128, block_k=128):
+    """q (B,L,H,D) model layout -> (B,L,H,D)."""
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_interpret())
+    return jnp.moveaxis(out, 1, 2)
+
+
+def ssd_scan(x, dt, A_log, B, C, D, chunk=256):
+    return _ssd.ssd_scan(x, dt, A_log, B, C, D, chunk=chunk,
+                         interpret=_interpret())
+
+
+def kd_loss(student_logits, teacher_logits, labels, rho, lam, tau):
+    return _kd.kd_loss(student_logits, teacher_logits, labels, rho, lam, tau,
+                       interpret=_interpret())

@@ -1,0 +1,93 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of a warp-level
+sequential scan, the sequence is split into MXU-friendly chunks; all
+intra-chunk work is (Q×N)·(N×Q) / (Q×Q)·(Q×P) matmuls, and the inter-chunk
+recurrence h_c = exp(a_c)·h_{c-1} + S_c rides the sequential TPU grid with
+the running state (N×P) held in VMEM scratch.  Grid = (batch, heads,
+chunks) with chunks innermost/sequential.
+
+Operands arrive pre-gated (x already scaled by dt, per-step log-decay `a`
+precomputed) — the cheap elementwise prologue stays in XLA where it fuses
+with the surrounding ops; the kernel owns the matmul + recurrence part.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, h_scr, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    a = a_ref[0, 0].astype(jnp.float32)          # (Q,)  log decay per step
+    B = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+
+    acum = jnp.cumsum(a)                          # (Q,)
+    a_end = acum[-1]
+
+    # intra-chunk: (C Bᵀ ⊙ decay ⊙ causal) x
+    scores = C @ B.T                              # (Q, Q)
+    decay = acum[:, None] - acum[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.exp(jnp.where(causal, decay, -1e30))
+    y = (scores * gate) @ x                       # (Q, P)
+
+    # inter-chunk contribution from carried state
+    h_prev = h_scr[...]                           # (N, P)
+    y = y + jnp.exp(acum)[:, None] * (C @ h_prev)
+
+    # update carried state: h = exp(a_end) h_prev + Σ exp(a_end - acum) B x
+    w = jnp.exp(a_end - acum)[:, None]            # (Q,1)
+    h_scr[...] = jnp.exp(a_end) * h_prev + B.T @ (w * x)
+
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan(x, dt, A_log, B, C, D, chunk=256, interpret=False):
+    """Same contract as ref.ssd_scan: x (b,L,H,P), dt (b,L,H),
+    B/C (b,L,H,N), A_log (H,), D (H,) -> y (b,L,H,P)."""
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, L)
+    nc = pl.cdiv(L, chunk)
+    f32 = jnp.float32
+
+    xdt = x.astype(f32) * dt[..., None].astype(f32)
+    a = (-jnp.exp(A_log.astype(f32))[None, None] * dt.astype(f32))  # (b,L,H)
+
+    # layout: (b, H, L, ·) so blocks index (batch, head, chunk)
+    xb = jnp.moveaxis(xdt, 2, 1)                  # (b,H,L,P)
+    ab = jnp.moveaxis(a, 2, 1)                    # (b,H,L)
+    Bb = jnp.moveaxis(B.astype(f32), 2, 1)        # (b,H,L,N)
+    Cb = jnp.moveaxis(C.astype(f32), 2, 1)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((1, 1, chunk, N), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), f32)],
+        interpret=interpret,
+    )(xb, ab, Bb, Cb)
+    y = jnp.moveaxis(y, 1, 2)                     # (b,L,H,P)
+    return y + D.astype(f32)[None, None, :, None] * xdt

@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct stand-ins for every model input, with shardings attached
+(weak-type correct, shardable, no device allocation) — the dry-run lowers
+against these.
+
+Shape semantics per assigned input shape:
+* train_4k    — one FedADC round: tokens (CP, CS, H, b, L) with
+                CP·CS = clients_per_round, H local steps, b·(CP·CS·H) =
+                global_batch sequences per round.
+* prefill_32k — serve-side full forward: tokens (B, L).
+* decode_32k / long_500k — serve_step: tokens (B, 1), cache of seq_len.
+
+Modality stubs (the assignment's one carve-out): whisper gets frame
+embeddings (B, L, d_model) standing in for the conv/mel frontend; the VLM
+gets patch embeddings (B, n_patch, 1024) standing in for InternViT.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FedConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.models.transformer import VIS_EMBED_DIM
+from repro.sharding import specs as S
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def round_decomposition(shape: ShapeConfig, fed: FedConfig, mesh: Mesh,
+                        multi_pod: bool) -> Tuple[int, int, int, int]:
+    """global_batch -> (CP, CS, H, b).  The local batch b is kept a multiple
+    of the data-axis size so it shards."""
+    data = mesh.shape.get("data", 1)
+    CP = mesh.shape.get("pod", 1) if multi_pod else 1
+    H = fed.local_steps
+    R = fed.clients_per_round
+    assert R % CP == 0, "clients_per_round must divide over pods"
+    CS = R // CP
+    b = shape.global_batch // (R * H)
+    assert b * R * H == shape.global_batch, (
+        f"global_batch {shape.global_batch} != clients {R} × H {H} × b {b}")
+    return CP, CS, H, b
+
+
+def train_inputs(mcfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
+                 mesh: Mesh, multi_pod: bool) -> Dict:
+    CP, CS, H, b = round_decomposition(shape, fed, mesh, multi_pod)
+    L = shape.seq_len
+    lead = "pod" if (multi_pod and "pod" in mesh.shape) else None
+    bspec = P(lead, None, None, "data" if b % mesh.shape.get("data", 1) == 0
+              else None, None)
+    batch = {
+        "tokens": _sds((CP, CS, H, b, L), jnp.int32, mesh, bspec),
+        "labels": _sds((CP, CS, H, b, L), jnp.int32, mesh, bspec),
+    }
+    if mcfg.is_encoder_decoder:
+        fspec = P(*bspec, None)
+        batch["frames"] = _sds((CP, CS, H, b, min(L, mcfg.max_seq_len),
+                                mcfg.d_model), jnp.bfloat16, mesh, fspec)
+        # decoder tokens bounded by learned positions
+        batch["tokens"] = _sds((CP, CS, H, b, min(L, mcfg.max_seq_len)),
+                               jnp.int32, mesh, bspec)
+        batch["labels"] = batch["tokens"]
+    if mcfg.n_patch_tokens > 0:
+        pspec = P(*bspec, None)
+        batch["patch_embeds"] = _sds((CP, CS, H, b, mcfg.n_patch_tokens,
+                                      VIS_EMBED_DIM), jnp.bfloat16, mesh, pspec)
+    return batch
+
+
+def prefill_inputs(mcfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   multi_pod: bool) -> Dict:
+    B, L = shape.global_batch, shape.seq_len
+    bspec = S.serve_batch_spec(mesh, B, multi_pod)
+    lead = bspec[0]
+    batch = {"tokens": _sds((B, L), jnp.int32, mesh, P(lead, None)),
+             "labels": _sds((B, L), jnp.int32, mesh, P(lead, None))}
+    if mcfg.is_encoder_decoder:
+        batch["frames"] = _sds((B, L, mcfg.d_model), jnp.bfloat16, mesh,
+                               P(lead, None, None))
+        batch["tokens"] = _sds((B, min(L, mcfg.max_seq_len)), jnp.int32,
+                               mesh, P(lead, None))
+        batch["labels"] = batch["tokens"]
+    if mcfg.n_patch_tokens > 0:
+        batch["patch_embeds"] = _sds((B, mcfg.n_patch_tokens, VIS_EMBED_DIM),
+                                     jnp.bfloat16, mesh, P(lead, None, None))
+    return batch
+
+
+def decode_inputs(mcfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  multi_pod: bool, cache_dtype=jnp.bfloat16):
+    """-> (cache_sds_with_shardings, tokens_sds, cur_pos_sds)."""
+    from repro.launch.serve import cache_shapes
+    B, L = shape.global_batch, shape.seq_len
+    cache = cache_shapes(mcfg, B, L, cache_dtype)
+    shardings = S.cache_shardings(cache, mesh)
+    cache_sds = jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        cache, shardings)
+    bspec = S.serve_batch_spec(mesh, B, multi_pod)
+    tokens = _sds((B, 1), jnp.int32, mesh, bspec)
+    cur_pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+    return cache_sds, tokens, cur_pos
+
+
+def state_inputs(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
+                 mesh: Mesh, mode: str = "train", fsdp_over_pod=False,
+                 tp_off=False):
+    """FedState ShapeDtypeStructs with parameter shardings attached."""
+    from repro.launch.train import state_shapes
+    st = state_shapes(mcfg, fed, run)
+    p_sh = S.param_shardings(st["params"], mesh, mode=mode,
+                             fsdp_over_pod=fsdp_over_pod, tp_off=tp_off)
+    s_sh = jax.tree.map(lambda leaf: None, st["server"])
+    if st["server"]:
+        s_sh = S.param_shardings(st["server"], mesh, mode=mode,
+                                 fsdp_over_pod=fsdp_over_pod, tp_off=tp_off)
+
+    def attach(sds, sh):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+    out = {
+        "params": jax.tree.map(attach, st["params"], p_sh),
+        "server": jax.tree.map(attach, st["server"], s_sh) if st["server"]
+        else {},
+        "round": jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())),
+    }
+    return out

@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before first jax init; smoke tests see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod (TPU v5e pod slice); the multi-pod mesh
+    adds a leading "pod" axis of 2 (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests (1×1, same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

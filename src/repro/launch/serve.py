@@ -1,0 +1,42 @@
+"""Serving steps for the inference shapes.
+
+* ``prefill_step`` — full-sequence forward (logits); lowered for the
+  prefill_32k shape.
+* ``serve_step``   — ONE new token against a KV/state cache of seq_len;
+  lowered for decode_32k / long_500k.  Greedy sampling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.models import encdec
+
+
+def make_prefill_step(mcfg: ModelConfig, use_pallas: bool = False):
+    model = get_model(mcfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, mcfg, use_pallas,
+                                  logits_slice="last")
+        return logits[:, -1].argmax(-1).astype(jnp.int32)
+    return prefill_step
+
+
+def make_serve_step(mcfg: ModelConfig):
+    model = get_model(mcfg)
+
+    def serve_step(params, cache, tokens, cur_pos):
+        logits, cache = model.decode_step(params, cache, tokens, cur_pos, mcfg)
+        next_tok = logits.argmax(-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+    return serve_step
+
+
+def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    model = get_model(mcfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(mcfg, batch, max_len, dtype))

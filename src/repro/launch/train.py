@@ -1,0 +1,169 @@
+"""Pod-scale federated round engine.
+
+Maps one FedADC communication round onto the production mesh:
+
+* the model is FSDP-sharded over "data" and tensor-parallel over "model";
+* each client's H local steps run as an inner ``lax.scan`` (local batch
+  sharded over "data");
+* clients are processed client-serially per pod (``lax.scan``, delta
+  accumulation — linearity of the FedADC aggregation makes waves exact),
+  and client-parallel across the "pod" axis (``vmap``; the Δ̄/momentum
+  all-reduce over pods is the ONLY cross-pod collective per round, which is
+  the FL communication pattern);
+* the server update (pseudo-momentum + model update) is sharded pointwise.
+
+``train_step(state, batch)`` is one full communication round:
+batch["tokens"]: (CP, CS, H, b, L) where CP·CS = clients_per_round and
+H = fed.local_steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, ModelConfig, RunConfig
+from repro.core import distillation as D
+from repro.core import tree as T
+from repro.core.strategies import get_strategy
+from repro.models.registry import get_model
+
+POD_SUPPORTED = ("fedavg", "slowmo", "fedadc", "fedadc_double", "fedprox",
+                 "fedadc+")
+
+
+def init_state(rng, mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
+    model = get_model(mcfg)
+    dtype = jnp.dtype(run.param_dtype)
+    params = model.init(rng, mcfg, dtype=dtype)
+    strategy = get_strategy(fed.strategy)
+    return {"params": params,
+            "server": strategy.server_init(params),
+            "round": jnp.zeros((), jnp.int32)}
+
+
+def state_shapes(mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
+    """abstract state (no allocation) for the dry-run."""
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: init_state(r, mcfg, fed, run), rng)
+
+
+def _token_histogram(tokens, vocab: int):
+    flat = tokens.reshape(-1)
+    return jnp.zeros((vocab,), jnp.float32).at[flat].add(1.0)
+
+
+def _local_objective(model, mcfg: ModelConfig, fed: FedConfig,
+                     run: RunConfig):
+    """Builds loss(theta, step_batch, theta_t, rho) for one local step."""
+    use_pallas = fed.use_pallas
+
+    def loss(theta, sb, theta_t, rho):
+        if not fed.distill:
+            l, aux = model.loss_fn(theta, sb, mcfg, use_pallas, run.remat)
+            return l
+        # FedADC+ self-confidence KD: teacher = global model θ_t (eq. 7-9),
+        # ρ from the client's token statistics.
+        s_logits, aux_l = model.forward(theta, sb, mcfg, use_pallas, run.remat)
+        t_logits, _ = model.forward(jax.lax.stop_gradient(theta_t), sb, mcfg,
+                                    use_pallas, run.remat)
+        if mcfg.n_patch_tokens > 0 and "patch_embeds" in sb:
+            np_ = sb["patch_embeds"].shape[1]
+            s_logits, t_logits = s_logits[:, np_:], t_logits[:, np_:]
+        labels = sb["labels"][:, 1:]
+        s_l, t_l = s_logits[:, :-1], t_logits[:, :-1]
+        mask = (labels >= 0)
+        V = s_l.shape[-1]
+        flat_s = s_l.reshape(-1, V)
+        flat_t = t_l.reshape(-1, V)
+        flat_y = jnp.clip(labels.reshape(-1), 0)
+        per_tok, _ = D.self_confidence_kd_loss(
+            flat_s, flat_t, flat_y, rho, fed.distill_lambda, fed.distill_tau)
+        # self_confidence_kd_loss returns batch mean; use masked variant:
+        return per_tok + 0.0 * aux_l
+    return loss
+
+
+def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
+                    client_parallel: int = 1):
+    """-> train_step(state, batch).  One communication round."""
+    if fed.strategy not in POD_SUPPORTED:
+        raise ValueError(
+            f"pod engine supports stateless-client strategies {POD_SUPPORTED};"
+            f" use the simulator for {fed.strategy} (per-client state).")
+    model = get_model(mcfg)
+    strategy = get_strategy(fed.strategy)
+    loss_fn = _local_objective(model, mcfg, fed, run)
+
+    def client_delta(theta_t, ctx, cb):
+        """cb: dict with leading (H, b) -> (delta, mean loss)."""
+        rho = None
+        if fed.distill:
+            hist = _token_histogram(cb["tokens"], mcfg.vocab_size)
+            rho = hist / jnp.maximum(hist.max(), 1.0)
+
+        def local(carry, sb):
+            theta, extra = carry
+
+            def grad_fn(th, _):
+                l, g = jax.value_and_grad(loss_fn)(th, sb, theta_t, rho)
+                return g, l
+            theta, extra, l = strategy.local_step(theta, ctx, grad_fn, None,
+                                                  fed, extra)
+            return (theta, extra), l
+
+        extra0 = strategy.init_extra(theta_t, fed)
+        (theta_H, _), ls = jax.lax.scan(local, (theta_t, extra0), cb)
+        return T.sub(theta_t, theta_H), jnp.mean(ls)
+
+    def per_group(theta_t, ctx, cbs):
+        """cbs: dict with leading (CS, H, b) — serial clients, Δ-accumulate."""
+        def serial(acc, cb):
+            d, l = client_delta(theta_t, ctx, cb)
+            return T.add(acc, d), l
+        acc0 = T.zeros_like(theta_t)
+        acc, ls = jax.lax.scan(serial, acc0, cbs)
+        return acc, jnp.mean(ls)
+
+    compute_dtype = jnp.dtype(run.compute_dtype)
+
+    def train_step(state: Dict, batch: Dict):
+        theta_master = state["params"]
+        # mixed-precision round (§Perf iteration 7): the server keeps the
+        # master θ/m in param_dtype; the per-round broadcast, local steps,
+        # and Δ accumulation run in compute_dtype (bf16) — halves the param
+        # all-gathers and activation traffic; Δ̄ is upcast before the f32
+        # server update, which preserves the momentum-accumulation
+        # precision the FedADC recursion needs.
+        mixed = (jnp.dtype(run.param_dtype) == jnp.float32
+                 and compute_dtype == jnp.bfloat16)
+        theta_t = T.cast(theta_master, compute_dtype) if mixed \
+            else theta_master
+        server_ctx_state = state["server"]
+        if mixed and "m" in server_ctx_state:
+            server_ctx_state = dict(server_ctx_state,
+                                    m=T.cast(server_ctx_state["m"],
+                                             compute_dtype))
+        ctx = strategy.client_setup(server_ctx_state, theta_t, fed)
+        CP = batch["tokens"].shape[0]
+        CS = batch["tokens"].shape[1]
+        if CP == 1:
+            squeezed = jax.tree.map(lambda x: x[0], batch)
+            acc, loss = per_group(theta_t, ctx, squeezed)
+        else:
+            accs, losses = jax.vmap(
+                lambda cbs: per_group(theta_t, ctx, cbs))(batch)
+            acc = jax.tree.map(lambda a: jnp.sum(a, 0), accs)
+            loss = jnp.mean(losses)
+        mean_delta = T.scale(acc, 1.0 / (CP * CS))
+        if mixed:
+            mean_delta = T.cast(mean_delta, jnp.float32)
+        new_params, new_server = strategy.server_update(
+            state["server"], theta_master, mean_delta, fed)
+        new_state = {"params": new_params, "server": new_server,
+                     "round": state["round"] + 1}
+        return new_state, {"loss": loss}
+
+    return train_step

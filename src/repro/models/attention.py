@@ -1,0 +1,328 @@
+"""Attention variants covering the assigned pool:
+
+* GQA with optional qk-norm (Qwen3), qkv bias (Qwen1.5), sliding window
+  (Llama-4 chunked / long-context variants), full causal (Mistral).
+* MLA (DeepSeek-V3 multi-head latent attention) with compressed-latent KV
+  cache and weight-absorbed decode — the TPU-friendly formulation (two
+  matmuls against the latent cache instead of materialising per-head K/V).
+
+Each variant exposes ``init``, ``forward`` (full sequence, causal) and
+``decode`` (single token against a cache).  Caches are dicts of arrays so
+they shard like any other pytree.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def _sdpa(q, k, v, mask, use_pallas: bool = False):
+    """q (B,Lq,H,D), k/v (B,Lk,Hk,D[v]), mask (B,1,Lq,Lk) bool."""
+    if use_pallas and mask is None:
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=True)
+    B, Lq, H, D = q.shape
+    Hk = k.shape[2]
+    g = H // Hk
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    qf = qf.reshape(B, Lq, Hk, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Lq, H, v.shape[-1]).astype(q.dtype)
+
+
+CHUNK_THRESHOLD = 8192     # sequences at/above this use q-block chunking
+CHUNK_BLOCK_Q = 1024
+
+
+def sdpa_auto(q, k, v, causal=True, window=0, use_pallas=False):
+    """Full-sequence attention that q-block-chunks long sequences so the
+    live score tensor is (H, block_q, Lk) instead of (H, Lq, Lk) — the
+    difference between a 32k-token prefill fitting in HBM or not
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    B, Lq, H, D = q.shape
+    if use_pallas and window == 0 and causal:
+        return _sdpa(q, k, v, None, use_pallas=True)
+    if Lq < CHUNK_THRESHOLD or Lq % CHUNK_BLOCK_Q != 0:
+        mask = causal_window_mask(Lq, Lq, window) if (causal or window) \
+            else None
+        return _sdpa(q, k, v, mask)
+    nb = Lq // CHUNK_BLOCK_Q
+    qb = q.reshape(B, nb, CHUNK_BLOCK_Q, H, D)
+    bq = CHUNK_BLOCK_Q
+    # sliding window: each q block only sees a (window + bq) K/V band —
+    # slice it instead of masking the full row (§Perf iteration 4)
+    band = min(window + bq, Lq) if window > 0 else Lq
+
+    def body(carry, inp):
+        i, qblk = inp
+        off = i * bq
+        if window > 0 and band < Lq:
+            start = jnp.clip(off + bq - band, 0, Lq - band)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            qpos = off + jnp.arange(bq)[:, None]
+            kpos = start + jnp.arange(band)[None, :]
+            mask = ((kpos <= qpos) & (kpos > qpos - window))[None, None]
+            out = _sdpa(qblk, kb, vb, mask)
+        else:
+            if causal or window:
+                mask = causal_window_mask(bq, Lq, window, q_offset=off)
+            else:
+                mask = None
+            out = _sdpa(qblk, k, v, mask)
+        return carry, out
+    _, outs = jax.lax.scan(body, 0, (jnp.arange(nb), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Lq, H, v.shape[-1])
+
+
+def causal_window_mask(lq: int, lk: int, window: int, q_offset: int = 0):
+    """(1,1,lq,lk) bool mask; window<=0 means full causal."""
+    qpos = jnp.arange(lq)[:, None] + q_offset
+    kpos = jnp.arange(lk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": L.linear_init(kq, d, cfg.n_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": L.linear_init(kk, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": L.linear_init(kv, d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": L.linear_init(ko, cfg.n_heads * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(hd, dtype)
+        p["k_norm"] = L.rmsnorm_init(hd, dtype)
+    return p
+
+
+def _gqa_qkv(p, x, cfg, positions):
+    B, Lq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(p["wq"], x).reshape(B, Lq, cfg.n_heads, hd)
+    k = L.linear(p["wk"], x).reshape(B, Lq, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], x).reshape(B, Lq, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = L.rope_freqs(hd, cfg.rope_theta, positions)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, layer_idx: int, use_pallas: bool = False):
+    B, Lq, _ = x.shape
+    positions = jnp.arange(Lq)[None, :]
+    q, k, v = _gqa_qkv(p, x, cfg, positions)
+    window = cfg.sliding_window if cfg.layer_uses_window(layer_idx) else 0
+    out = sdpa_auto(q, k, v, causal=True, window=window,
+                    use_pallas=use_pallas)
+    return L.linear(p["wo"], out.reshape(B, Lq, -1))
+
+
+def gqa_init_cache(cfg, layer_idx: int, batch: int, max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    if cfg.layer_uses_window(layer_idx):
+        max_len = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "kpos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def gqa_decode(p, x, cache, cfg, layer_idx: int, cur_pos):
+    """x (B,1,d); cur_pos scalar int32 = index of this token. Ring-buffer
+    write for windowed layers, plain write otherwise (buffer sized to fit)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_pos, jnp.int32)
+    q, k, v = _gqa_qkv(p, x, cfg, positions)
+    S = cache["k"].shape[1]
+    slot = jnp.mod(cur_pos, S)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["kpos"],
+                                        cur_pos[None].astype(jnp.int32), (slot,))
+    window = cfg.sliding_window if cfg.layer_uses_window(layer_idx) else 0
+    valid = (kpos >= 0) & (kpos <= cur_pos)
+    if window > 0:
+        valid &= kpos > cur_pos - window
+    mask = valid[None, None, None, :]
+    out = _sdpa(q, ck, cv, mask)
+    y = L.linear(p["wo"], out.reshape(B, 1, -1))
+    return y, {"k": ck, "v": cv, "kpos": kpos}
+
+
+def gqa_prefill(p, x, cfg, layer_idx: int, max_len: int):
+    """Full-sequence forward that also materialises the decode cache."""
+    B, Lq, _ = x.shape
+    positions = jnp.arange(Lq)[None, :]
+    q, k, v = _gqa_qkv(p, x, cfg, positions)
+    window = cfg.sliding_window if cfg.layer_uses_window(layer_idx) else 0
+    mask = causal_window_mask(Lq, Lq, window)
+    out = _sdpa(q, k, v, mask)
+    y = L.linear(p["wo"], out.reshape(B, Lq, -1))
+    S = min(max_len, window) if window > 0 else max_len
+    ck = k[:, -S:].astype(x.dtype)
+    cv = v[:, -S:].astype(x.dtype)
+    kpos = jnp.arange(Lq)[-S:].astype(jnp.int32)
+    pad = S - ck.shape[1]
+    if pad > 0:
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    return y, {"k": ck, "v": cv, "kpos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": L.linear_init(ks[0], d, m.q_lora_rank, dtype=dtype),
+        "q_norm": L.rmsnorm_init(m.q_lora_rank, dtype),
+        "wuq": L.linear_init(ks[1], m.q_lora_rank, cfg.n_heads * qk_dim, dtype=dtype),
+        "wdkv": L.linear_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dtype),
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dtype),
+        "wuk": L.linear_init(ks[3], m.kv_lora_rank,
+                             cfg.n_heads * m.qk_nope_head_dim, dtype=dtype),
+        "wuv": L.linear_init(ks[4], m.kv_lora_rank,
+                             cfg.n_heads * m.v_head_dim, dtype=dtype),
+        "wo": L.linear_init(ks[5], cfg.n_heads * m.v_head_dim, d, dtype=dtype),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    B, Lq, _ = x.shape
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = L.linear(p["wuq"], L.rmsnorm(p["q_norm"], L.linear(p["wdq"], x),
+                                     cfg.norm_eps))
+    q = q.reshape(B, Lq, cfg.n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    cos, sin = L.rope_freqs(m.qk_rope_head_dim, cfg.rope_theta, positions)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    ckv = L.linear(p["wdkv"], x)
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv = L.rmsnorm(p["kv_norm"], c_kv, cfg.norm_eps)
+    cos, sin = L.rope_freqs(m.qk_rope_head_dim, cfg.rope_theta, positions)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, layer_idx: int = 0, use_pallas: bool = False):
+    """Naive (expanded) formulation for train / prefill."""
+    m = cfg.mla
+    B, Lq, _ = x.shape
+    positions = jnp.arange(Lq)[None, :]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    k_nope = L.linear(p["wuk"], c_kv).reshape(B, Lq, cfg.n_heads, m.qk_nope_head_dim)
+    v = L.linear(p["wuv"], c_kv).reshape(B, Lq, cfg.n_heads, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, Lq, cfg.n_heads,
+                                           m.qk_rope_head_dim))], -1)
+    out = sdpa_auto(q, k, v, causal=True)
+    return L.linear(p["wo"], out.reshape(B, Lq, -1))
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "kpos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def mla_decode(p, x, cache, cfg, cur_pos):
+    """Weight-absorbed decode: scores and values are matmuls against the
+    compressed latent cache — per-head K/V never materialise."""
+    m = cfg.mla
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)           # (B,1,H,*)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)        # (B,1,r),(B,1,dr)
+    slot = jnp.mod(cur_pos, cache["c_kv"].shape[1])
+    cc = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                      c_kv.astype(cache["c_kv"].dtype),
+                                      (0, slot, 0))
+    cr = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                      k_rope.astype(cache["k_rope"].dtype),
+                                      (0, slot, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["kpos"],
+                                        cur_pos[None].astype(jnp.int32), (slot,))
+    # absorb W_uk into q:  q_abs (B,1,H,r)
+    wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s1 = jnp.einsum("bqhr,bkr->bhqk", q_abs, cc.astype(jnp.float32))
+    s2 = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                    cr.astype(jnp.float32))
+    scores = (s1 + s2) * scale
+    valid = (kpos >= 0) & (kpos <= cur_pos)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqk,bkr->bqhr", w, cc.astype(jnp.float32))
+    wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, wuv.astype(jnp.float32))
+    y = L.linear(p["wo"], out.reshape(B, 1, -1).astype(x.dtype))
+    return y, {"c_kv": cc, "k_rope": cr, "kpos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (Whisper decoder).
+# ---------------------------------------------------------------------------
+def cross_attn_init(key, cfg, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": L.linear_init(kq, d, cfg.n_heads * hd, bias=True, dtype=dtype),
+        "wk": L.linear_init(kk, d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wv": L.linear_init(kv, d, cfg.n_kv_heads * hd, bias=True, dtype=dtype),
+        "wo": L.linear_init(ko, cfg.n_heads * hd, d, bias=True, dtype=dtype),
+    }
+
+
+def cross_attn(p, x, enc_out, cfg):
+    B, Lq, _ = x.shape
+    Lk = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    q = L.linear(p["wq"], x).reshape(B, Lq, cfg.n_heads, hd)
+    k = L.linear(p["wk"], enc_out).reshape(B, Lk, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], enc_out).reshape(B, Lk, cfg.n_kv_heads, hd)
+    out = _sdpa(q, k, v, None)
+    return L.linear(p["wo"], out.reshape(B, Lq, -1))

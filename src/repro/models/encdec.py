@@ -1,0 +1,192 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, frames, d_model).  This module implements the
+transformer encoder (bidirectional) + decoder (causal self-attn + cross-attn),
+which is the assigned backbone.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, dtype),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "ln2": L.layernorm_init(cfg.d_model, dtype),
+        "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.layernorm_init(cfg.d_model, dtype),
+        "attn": A.gqa_init(k1, cfg, dtype),
+        "ln_x": L.layernorm_init(cfg.d_model, dtype),
+        "xattn": A.cross_attn_init(k2, cfg, dtype),
+        "ln2": L.layernorm_init(cfg.d_model, dtype),
+        "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    ke, kd, kt, kp = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": L.embedding_init(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "pos_dec": (jax.random.normal(kp, (cfg.max_seq_len, cfg.d_model))
+                    * 0.01).astype(dtype),
+        "enc": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": L.layernorm_init(cfg.d_model, dtype),
+        "dec": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "dec_norm": L.layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames (B, F, d_model) — stub conv-frontend output."""
+    x = frames
+
+    def body(h, lp):
+        return _enc_self(lp, h, cfg), None
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _enc_self(lp, h, cfg):
+    B, Lq, _ = h.shape
+    hd = cfg.resolved_head_dim
+    hn = L.layernorm(lp["ln1"], h, cfg.norm_eps)
+    positions = jnp.arange(Lq)[None, :]
+    q, k, v = A._gqa_qkv(lp["attn"], hn, cfg, positions)
+    out = A.sdpa_auto(q, k, v, causal=False)    # bidirectional
+    h = h + L.linear(lp["attn"]["wo"], out.reshape(B, Lq, -1))
+    h = h + L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps))
+    return h
+
+
+def _dec_block(lp, h, enc_out, cfg, mask):
+    B, Lq, _ = h.shape
+    hn = L.layernorm(lp["ln1"], h, cfg.norm_eps)
+    positions = jnp.arange(Lq)[None, :]
+    q, k, v = A._gqa_qkv(lp["attn"], hn, cfg, positions)
+    out = A.sdpa_auto(q, k, v, causal=True)
+    h = h + L.linear(lp["attn"]["wo"], out.reshape(B, Lq, -1))
+    h = h + A.cross_attn(lp["xattn"], L.layernorm(lp["ln_x"], h, cfg.norm_eps),
+                         enc_out, cfg)
+    h = h + L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps))
+    return h
+
+
+def forward(params, batch, cfg: ModelConfig, use_pallas: bool = False,
+            remat: str = "none", logits_slice: str = "all"):
+    """batch: frames (B,F,d), tokens (B,L) -> (logits, aux)."""
+    enc_out = encode(params, batch["frames"], cfg)
+    x = L.embed(params["embed"], batch["tokens"])
+    x = x + params["pos_dec"][: x.shape[1]].astype(x.dtype)
+    mask = A.causal_window_mask(x.shape[1], x.shape[1], 0)
+
+    def body(h, lp):
+        return _dec_block(lp, h, enc_out, cfg, mask), None
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:]
+    logits = x @ params["embed"]["emb"].T.astype(x.dtype)   # tied
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, use_pallas: bool = False,
+            remat: str = "none"):
+    logits, aux = forward(params, batch, cfg, use_pallas, remat)
+    targets = batch["labels"][:, 1:]
+    logits = logits[:, :-1]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.clip(targets, 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), tgt[..., None],
+                               axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode: self-attn KV cache + precomputed cross K/V.
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    nl = cfg.n_layers
+    dec_len = min(max_len, cfg.max_seq_len)
+    return {
+        "k": jnp.zeros((nl, batch, dec_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((nl, batch, dec_len, cfg.n_kv_heads, hd), dtype),
+        "kpos": jnp.full((nl, dec_len), -1, jnp.int32),
+        # cross-attention K/V over encoder frames (computed at prefill)
+        "xk": jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, hd), dtype),
+        "xv": jnp.zeros((nl, batch, max_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def prefill_cross(params, enc_out, cfg, cache):
+    """Populate cross K/V from encoder output."""
+    B, F, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+
+    def one(lp):
+        k = L.linear(lp["xattn"]["wk"], enc_out).reshape(B, F, cfg.n_kv_heads, hd)
+        v = L.linear(lp["xattn"]["wv"], enc_out).reshape(B, F, cfg.n_kv_heads, hd)
+        return k, v
+    xk, xv = jax.vmap(one)(params["dec"])
+    return dict(cache, xk=xk.astype(cache["xk"].dtype),
+                xv=xv.astype(cache["xv"].dtype))
+
+
+def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig):
+    B = tokens.shape[0]
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens)
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], jnp.minimum(cur_pos, cfg.max_seq_len - 1), 1)
+    x = x + pos_emb[None].astype(x.dtype)
+
+    def body(h, xs):
+        lp, ck, cv, ckpos, xk, xv = xs
+        hn = L.layernorm(lp["ln1"], h, cfg.norm_eps)
+        positions = jnp.full((B, 1), cur_pos, jnp.int32)
+        q, k, v = A._gqa_qkv(lp["attn"], hn, cfg, positions)
+        S = ck.shape[1]
+        slot = jnp.mod(cur_pos, S)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        ckpos = jax.lax.dynamic_update_slice(ckpos,
+                                             cur_pos[None].astype(jnp.int32),
+                                             (slot,))
+        valid = (ckpos >= 0) & (ckpos <= cur_pos)
+        out = A._sdpa(q, ck, cv, valid[None, None, None, :])
+        h = h + L.linear(lp["attn"]["wo"], out.reshape(B, 1, -1))
+        # cross attention against precomputed K/V
+        hx = L.layernorm(lp["ln_x"], h, cfg.norm_eps)
+        qx = L.linear(lp["xattn"]["wq"], hx).reshape(B, 1, cfg.n_heads, hd)
+        outx = A._sdpa(qx, xk, xv, None)
+        h = h + L.linear(lp["xattn"]["wo"], outx.reshape(B, 1, -1))
+        h = h + L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (ck, cv, ckpos)
+    x, (nk, nv, nkpos) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["kpos"],
+                  cache["xk"], cache["xv"]))
+    x = L.layernorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = x @ params["embed"]["emb"].T.astype(x.dtype)
+    return logits[:, 0], dict(cache, k=nk, v=nv, kpos=nkpos)

@@ -1,0 +1,132 @@
+"""Core functional layers.  Parameters are plain nested dicts of jnp arrays so
+they compose with pjit sharding and the FL strategies (which treat the model
+as an opaque pytree)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.uniform(key, shape, dtype=jnp.float32, minval=-scale,
+                               maxval=scale)).astype(dtype)
+
+
+def linear_init(key, d_in, d_out, bias=False, dtype=jnp.float32):
+    kw, kb = jax.random.split(key)
+    p = {"w": _dense_init(kw, (d_in, d_out), in_axis=0, dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab, d_model, dtype=jnp.float32):
+    return {"emb": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["emb"], ids, axis=0)
+
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def groupnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def groupnorm(p, x, groups=32, eps=1e-5):
+    """Channel-last group norm (used by the paper's ResNet-18 repro)."""
+    dt = x.dtype
+    *lead, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.astype(jnp.float32).reshape(*lead, g, c // g)
+    mu = jnp.mean(xg, axis=(-1,), keepdims=True)
+    # normalize over (spatial, channels-in-group): collapse spatial dims
+    axes = tuple(range(1, len(lead))) + (len(lead), len(lead) + 1)
+    mu = jnp.mean(xg, axis=axes, keepdims=True)
+    var = jnp.mean((xg - mu) ** 2, axis=axes, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(x.shape)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray):
+    """positions (...,) -> cos,sin of shape (..., head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., L, H, D); cos/sin broadcastable (..., L, 1, D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    while cos.ndim < x1.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP (the standard FFN for every dense arch in the pool).
+# --------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff, dtype=dtype),
+        "up": linear_init(k2, d_model, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(p, x):
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": linear_init(k1, d_model, d_ff, bias=True, dtype=dtype),
+            "fc2": linear_init(k2, d_ff, d_model, bias=True, dtype=dtype)}
+
+
+def gelu_mlp(p, x):
+    return linear(p["fc2"], jax.nn.gelu(linear(p["fc1"], x)))

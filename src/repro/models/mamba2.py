@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) block — Zamba2's backbone.
+
+TPU adaptation: training/prefill uses the *chunked* SSD formulation (intra-
+chunk work is pure matmul → MXU; inter-chunk recurrence is a length/chunk
+lax.scan), instead of the CUDA selective-scan kernel.  Chunk size is
+MXU-aligned (256 by default).  Decode is the O(1) state recurrence.
+A Pallas kernel for the intra-chunk matmuls lives in kernels/ssd_scan.py
+with this module's ``ssd_chunked`` as its oracle counterpart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    conv_ch = d_inner + 2 * G * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": L.linear_init(k1, d, 2 * d_inner + 2 * G * N + H, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_ch)) * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": L.rmsnorm_init(d_inner, dtype),
+        "out_proj": L.linear_init(k3, d_inner, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    G, N = s.n_groups, s.d_state
+    H = d_inner // s.head_dim
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    return z, xbc, dt, d_inner, G, N, H
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over (B, L, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for k in range(K):
+        out = out + pad[:, k:k + xbc.shape[1]].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(x, dt, A_log, Bmat, Cmat, D, chunk: int):
+    """Chunked SSD.  x (B,L,H,P); dt (B,L,H); Bmat/Cmat (B,L,H,N); returns
+    y (B,L,H,P).  All in float32 internally."""
+    Bsz, Lq, H, P = x.shape
+    N = Bmat.shape[-1]
+    nc = Lq // chunk
+    assert nc * chunk == Lq, "seq len must be divisible by chunk"
+    f32 = jnp.float32
+    x = x.astype(f32) * dt[..., None].astype(f32)                # pre-scale by dt
+    a = -jnp.exp(A_log.astype(f32))[None, None] * dt.astype(f32)  # (B,L,H) log decay
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    ac = a.reshape(Bsz, nc, chunk, H)
+    Bc = Bmat.astype(f32).reshape(Bsz, nc, chunk, H, N)
+    Cc = Cmat.astype(f32).reshape(Bsz, nc, chunk, H, N)
+
+    acum = jnp.cumsum(ac, axis=2)                                # (B,nc,Q,H)
+    # intra-chunk: scores (B,nc,H,Q,Q)
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", Cc, Bc)
+    decay = acum[..., :, None, :] - acum[..., None, :, :]        # (B,nc,Q,Q,H)
+    decay = jnp.transpose(decay, (0, 1, 4, 2, 3))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of the (positive, unbounded) upper triangle
+    # overflows and poisons gradients through the where
+    gate = jnp.exp(jnp.where(causal, decay, -1e30))
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", scores * gate, xc)
+
+    # chunk states (B,nc,H,N,P)
+    a_end = acum[:, :, -1]                                       # (B,nc,H)
+    rem = a_end[:, :, None] - acum                               # decay to chunk end
+    S = jnp.einsum("bnkhd,bnkh,bnkhp->bnhdp", Bc, jnp.exp(rem), xc)
+
+    def step(h, inp):
+        dec, s = inp                                             # (B,H),(B,H,N,P)
+        h_new = h * jnp.exp(dec)[..., None, None] + s
+        return h_new, h                                          # emit state BEFORE chunk
+    h0 = jnp.zeros((Bsz, H, N, P), f32)
+    _, h_prev = jax.lax.scan(step, h0,
+                             (jnp.moveaxis(a_end, 1, 0), jnp.moveaxis(S, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                          # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bnqhd,bnqh,bnhdp->bnqhp", Cc, jnp.exp(acum), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, Lq, H, P)
+    y = y + D.astype(f32)[None, None, :, None] * x
+    return y
+
+
+def mamba2_forward(p, x, cfg, use_pallas: bool = False):
+    s = cfg.ssm
+    B, Lq, _ = x.shape
+    zxbcdt = L.linear(p["in_proj"], x)
+    z, xbc, dt, d_inner, G, N, H = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, Lq, H, s.head_dim)
+    rep = H // G
+    Bm = jnp.repeat(Bm.reshape(B, Lq, G, N), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B, Lq, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    chunk = min(s.chunk_size, Lq)
+    if use_pallas:
+        from repro.kernels import ops
+        y = ops.ssd_scan(xs, dt, p["A_log"], Bm, Cm, p["D"], chunk)
+    else:
+        y = ssd_chunked(xs, dt, p["A_log"], Bm, Cm, p["D"], chunk)
+    y = y.reshape(B, Lq, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return L.linear(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# O(1) decode
+# ---------------------------------------------------------------------------
+def mamba2_init_cache(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "h": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(p, x, cache, cfg):
+    """x (B,1,d) -> (y (B,1,d), cache)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    zxbcdt = L.linear(p["in_proj"], x)[:, 0]                     # (B, *)
+    z, xbc, dt, d_inner, G, N, H = _split_proj(cfg, zxbcdt)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w)
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, H, s.head_dim).astype(jnp.float32)
+    rep = H // G
+    Bm = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(-jnp.exp(p["A_log"])[None] * dt)             # (B,H)
+    xdt = xs * dt[..., None]
+    h = cache["h"] * decay[..., None, None] + jnp.einsum("bhd,bhp->bhdp", Bm, xdt)
+    y = jnp.einsum("bhd,bhdp->bhp", Cm, h) + p["D"][None, :, None] * xdt
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z[:, None]), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    new_cache = {"h": h, "conv": hist[:, 1:]}
+    return out, new_cache

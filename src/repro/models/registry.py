@@ -1,0 +1,42 @@
+"""Model registry: uniform (init, forward, loss, cache, decode) bundle per
+architecture family, plus analytic parameter counting for the roofline."""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def get_model(cfg: ModelConfig) -> SimpleNamespace:
+    mod = encdec if cfg.is_encoder_decoder else transformer
+    return SimpleNamespace(
+        init=mod.init,
+        forward=mod.forward,
+        loss_fn=mod.loss_fn,
+        init_cache=mod.init_cache,
+        decode_step=mod.decode_step,
+    )
+
+
+def _param_shapes(cfg: ModelConfig):
+    mod = encdec if cfg.is_encoder_decoder else transformer
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: mod.init(r, cfg), rng)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = _param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if active_only and cfg.moe is not None and "experts" in keys:
+            n = n * cfg.moe.top_k // max(cfg.moe.n_experts, 1)
+        total += n
+    return total

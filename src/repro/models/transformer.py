@@ -1,0 +1,314 @@
+"""Decoder-only stack assembler.
+
+Supports heterogeneous block patterns (dense attention, MoE, Mamba2, m/sLSTM,
+Zamba2-style shared attention).  Consecutive blocks of the same signature are
+stacked and executed with ``lax.scan`` so an 88-layer model traces one block
+body per run, not 88 — this keeps multi-pod ``lower()/compile()`` tractable.
+
+Window sizes are per-layer *static* (they decide cache shapes), so runs are
+partitioned by (kind, window).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, MOE, MAMBA2, SLSTM, MLSTM, SHARED_ATTN,
+                                ModelConfig)
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE_MOD
+from repro.models import xlstm as XL
+
+VIS_EMBED_DIM = 1024   # stub vision tower output dim (InternViT projector in)
+
+
+# ---------------------------------------------------------------------------
+# Run partitioning
+# ---------------------------------------------------------------------------
+def layer_window(cfg: ModelConfig, block_idx: int) -> int:
+    return cfg.sliding_window if cfg.layer_uses_window(block_idx) else 0
+
+
+def partition_runs(cfg: ModelConfig) -> List[Tuple[str, int, List[int]]]:
+    """-> [(kind, window, [block indices])] preserving order."""
+    runs: List[Tuple[str, int, List[int]]] = []
+    for i, kind in enumerate(cfg.blocks()):
+        win = layer_window(cfg, i) if kind in (ATTN, MOE, SHARED_ATTN) else 0
+        if runs and runs[-1][0] == kind and runs[-1][1] == win \
+                and kind != SHARED_ATTN:
+            runs[-1][2].append(i)
+        else:
+            runs.append((kind, win, [i]))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+def _block_init(kind: str, key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in (ATTN, SHARED_ATTN):
+        p = {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+             "ln2": L.rmsnorm_init(cfg.d_model, dtype)}
+        if cfg.mla is not None:
+            p["attn"] = A.mla_init(k1, cfg, dtype)
+        else:
+            p["attn"] = A.gqa_init(k1, cfg, dtype)
+        d_ff = cfg.d_ff if cfg.d_ff > 0 else 4 * cfg.d_model
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, d_ff, dtype)
+        return p
+    if kind == MOE:
+        p = {"ln1": L.rmsnorm_init(cfg.d_model, dtype),
+             "ln2": L.rmsnorm_init(cfg.d_model, dtype)}
+        p["attn"] = (A.mla_init(k1, cfg, dtype) if cfg.mla is not None
+                     else A.gqa_init(k1, cfg, dtype))
+        p["moe"] = MOE_MOD.moe_init(k2, cfg, dtype)
+        return p
+    if kind == MAMBA2:
+        return {"ln": L.rmsnorm_init(cfg.d_model, dtype),
+                "mix": M2.mamba2_init(k1, cfg, dtype)}
+    if kind == MLSTM:
+        return {"ln": L.rmsnorm_init(cfg.d_model, dtype),
+                "mix": XL.mlstm_init(k1, cfg, dtype)}
+    if kind == SLSTM:
+        return {"ln": L.rmsnorm_init(cfg.d_model, dtype),
+                "mix": XL.slstm_init(k1, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _attn_fwd(p, x, cfg, window, use_pallas):
+    if cfg.mla is not None:
+        return A.mla_forward(p, x, cfg, use_pallas=use_pallas)
+    B, Lq, _ = x.shape
+    positions = jnp.arange(Lq)[None, :]
+    q, k, v = A._gqa_qkv(p, x, cfg, positions)
+    out = A.sdpa_auto(q, k, v, causal=True, window=window,
+                      use_pallas=use_pallas)
+    return L.linear(p["wo"], out.reshape(B, Lq, -1))
+
+
+def _block_fwd(kind: str, p, x, cfg: ModelConfig, window: int,
+               use_pallas: bool):
+    """-> (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN, SHARED_ATTN):
+        x = x + _attn_fwd(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cfg, window, use_pallas)
+        x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        return x, aux
+    if kind == MOE:
+        x = x + _attn_fwd(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          cfg, window, use_pallas)
+        y, aux = MOE_MOD.moe_apply(p["moe"], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+        return x + y, aux
+    if kind == MAMBA2:
+        return x + M2.mamba2_forward(p["mix"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                     cfg, use_pallas), aux
+    if kind == MLSTM:
+        return x + XL.mlstm_forward(p["mix"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                    cfg), aux
+    if kind == SLSTM:
+        return x + XL.slstm_forward(p["mix"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                    cfg), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+def init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    runs = partition_runs(cfg)
+    n_keys = len(runs) + 4
+    keys = jax.random.split(rng, n_keys)
+    params: Dict = {"embed": L.embedding_init(keys[0], cfg.vocab_size,
+                                              cfg.d_model, dtype)}
+    shared_done = False
+    run_params = {}
+    for ri, (kind, win, idxs) in enumerate(runs):
+        if kind == SHARED_ATTN:
+            if not shared_done:
+                params["shared_attn"] = _block_init(SHARED_ATTN, keys[1], cfg, dtype)
+                shared_done = True
+            continue
+        layer_keys = jax.random.split(keys[ri + 4], len(idxs))
+        run_params[str(ri)] = jax.vmap(
+            lambda k: _block_init(kind, k, cfg, dtype))(layer_keys)
+    params["runs"] = run_params
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.linear_init(keys[2], cfg.d_model,
+                                          cfg.vocab_size, dtype=dtype)
+    if cfg.n_patch_tokens > 0:
+        params["vis_proj"] = L.linear_init(keys[3], VIS_EMBED_DIM,
+                                           cfg.d_model, bias=True, dtype=dtype)
+    return params
+
+
+def _embed_inputs(params, batch, cfg):
+    x = L.embed(params["embed"], batch["tokens"])
+    if cfg.n_patch_tokens > 0 and "patch_embeds" in batch:
+        vis = L.linear(params["vis_proj"], batch["patch_embeds"].astype(x.dtype))
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def _unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["emb"].T.astype(x.dtype)
+    return L.linear(params["lm_head"], x)
+
+
+def forward(params, batch, cfg: ModelConfig, use_pallas: bool = False,
+            remat: str = "none", logits_slice: str = "all"):
+    """-> (logits (B, L[, +patch], V), aux_loss).  logits_slice="last"
+    unembeds only the final position (serving prefill: skips the (L, V)
+    vocab matmul for every non-final token — §Perf iteration 2)."""
+    x = _embed_inputs(params, batch, cfg)
+    aux = jnp.zeros((), jnp.float32)
+    runs = partition_runs(cfg)
+    for ri, (kind, win, idxs) in enumerate(runs):
+        if kind == SHARED_ATTN:
+            x, a = _block_fwd(SHARED_ATTN, params["shared_attn"], x, cfg,
+                              win, use_pallas)
+            aux = aux + a
+            continue
+        stacked = params["runs"][str(ri)]
+
+        def body(carry, lp, _kind=kind, _win=win):
+            h, acc = carry
+            h, a = _block_fwd(_kind, lp, h, cfg, _win, use_pallas)
+            return (h, acc + a), None
+        if remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stacked)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:]
+    return _unembed(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, use_pallas: bool = False,
+            remat: str = "none"):
+    """Next-token cross-entropy; positions with label<0 are masked.
+    -> (loss, dict)."""
+    logits, aux = forward(params, batch, cfg, use_pallas, remat)
+    labels = batch["labels"]
+    if cfg.n_patch_tokens > 0 and "patch_embeds" in batch:
+        logits = logits[:, batch["patch_embeds"].shape[1]:]
+    logits = logits[:, :-1]
+    targets = labels[:, 1:]
+    mask = (targets >= 0).astype(jnp.float32)
+    tgt = jnp.clip(targets, 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step): one token against a cache.
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    runs = partition_runs(cfg)
+    cache: Dict = {}
+    for ri, (kind, win, idxs) in enumerate(runs):
+        if kind in (ATTN, MOE, SHARED_ATTN):
+            if cfg.mla is not None:
+                one = lambda: A.mla_init_cache(cfg, batch, max_len, dtype)
+            else:
+                S = min(max_len, win) if win > 0 else max_len
+                one = lambda S=S: {
+                    "k": jnp.zeros((batch, S, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim), dtype),
+                    "v": jnp.zeros((batch, S, cfg.n_kv_heads,
+                                    cfg.resolved_head_dim), dtype),
+                    "kpos": jnp.full((S,), -1, jnp.int32)}
+        elif kind == MAMBA2:
+            one = lambda: M2.mamba2_init_cache(cfg, batch, dtype)
+        elif kind == MLSTM:
+            one = lambda: XL.mlstm_init_cache(cfg, batch, dtype)
+        elif kind == SLSTM:
+            one = lambda: XL.slstm_init_cache(cfg, batch, dtype)
+        else:
+            raise ValueError(kind)
+        layers = [one() for _ in idxs]
+        cache[str(ri)] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers) \
+            if len(layers) > 1 else jax.tree.map(lambda v: v[None], layers[0])
+    return cache
+
+
+def _block_decode(kind, p, x, c, cfg, cur_pos):
+    if kind in (ATTN, MOE, SHARED_ATTN):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.mla is not None:
+            y, c = A.mla_decode(p["attn"], h, c, cfg, cur_pos)
+        else:
+            # window handled via cache size (ring buffer) + kpos mask
+            B = x.shape[0]
+            positions = jnp.full((B, 1), cur_pos, jnp.int32)
+            q, k, v = A._gqa_qkv(p["attn"], h, cfg, positions)
+            S = c["k"].shape[1]
+            slot = jnp.mod(cur_pos, S)
+            ck = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype),
+                                              (0, slot, 0, 0))
+            kpos = jax.lax.dynamic_update_slice(
+                c["kpos"], cur_pos[None].astype(jnp.int32), (slot,))
+            valid = (kpos >= 0) & (kpos <= cur_pos)
+            out = A._sdpa(q, ck, cv, valid[None, None, None, :])
+            y = L.linear(p["attn"]["wo"], out.reshape(B, 1, -1))
+            c = {"k": ck, "v": cv, "kpos": kpos}
+        x = x + y
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == MOE:
+            y2, _ = MOE_MOD.moe_apply(p["moe"], h2, cfg)
+        else:
+            y2 = L.mlp(p["mlp"], h2)
+        return x + y2, c
+    if kind == MAMBA2:
+        y, c = M2.mamba2_decode(p["mix"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                                c, cfg)
+        return x + y, c
+    if kind == MLSTM:
+        y, c = XL.mlstm_decode(p["mix"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                               c, cfg)
+        return x + y, c
+    if kind == SLSTM:
+        y, c = XL.slstm_decode(p["mix"], L.rmsnorm(p["ln"], x, cfg.norm_eps),
+                               c, cfg)
+        return x + y, c
+    raise ValueError(kind)
+
+
+def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig):
+    """tokens (B,1) int32; cur_pos scalar int32 -> (logits (B,V), cache)."""
+    x = L.embed(params["embed"], tokens)
+    runs = partition_runs(cfg)
+    new_cache: Dict = {}
+    for ri, (kind, win, idxs) in enumerate(runs):
+        c = cache[str(ri)]
+        p = (params["shared_attn"] if kind == SHARED_ATTN
+             else params["runs"][str(ri)])
+
+        def body(h, xs, _kind=kind, _shared=(kind == SHARED_ATTN), _p=p):
+            if _shared:
+                lc = xs
+                lp = _p
+            else:
+                lp, lc = xs
+            h, lc = _block_decode(_kind, lp, h, lc, cfg, cur_pos)
+            return h, lc
+        if kind == SHARED_ATTN:
+            x, nc = jax.lax.scan(body, x, c)
+        else:
+            x, nc = jax.lax.scan(body, x, (p, c))
+        new_cache[str(ri)] = nc
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    return logits[:, 0], new_cache

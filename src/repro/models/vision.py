@@ -1,0 +1,144 @@
+"""The paper's own experiment models.
+
+* ``cnn``   — 4 conv + 4 FC, no batch norm, maxpool (Sec. IV-B1, CIFAR-10).
+* ``resnet18`` — ResNet-18 with GroupNorm(32) after convs (Sec. IV-C1,
+  CIFAR-100), since BN statistics break under federated non-iid clients.
+
+Inputs are NHWC images.  These are small enough to run the full federated
+simulator on CPU, which is how the paper's tables/figures are reproduced.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def he_linear_init(key, d_in, d_out, dtype=jnp.float32):
+    """Kaiming-normal init for ReLU stacks (the vision nets are 8 layers
+    deep with no normalisation — the transformer-style uniform init makes
+    activations vanish)."""
+    w = jax.random.normal(key, (d_in, d_out)) * math.sqrt(2.0 / d_in)
+    return {"w": w.astype(dtype), "b": jnp.zeros((d_out,), dtype)}
+
+
+def conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    kw_, kb = jax.random.split(key)
+    w = jax.random.normal(kw_, (kh, kw, cin, cout)) * math.sqrt(2.0 / fan_in)
+    return {"w": w.astype(dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# Paper CNN: 4 conv + 4 FC.
+# ---------------------------------------------------------------------------
+def cnn_init(rng, n_classes=10, dtype=jnp.float32, width=32, image_size=32):
+    ks = jax.random.split(rng, 8)
+    w = width
+    spatial = max(image_size // 16, 1) ** 2   # after 4 maxpools
+    return {
+        "c1": conv_init(ks[0], 3, 3, 3, w, dtype),
+        "c2": conv_init(ks[1], 3, 3, w, 2 * w, dtype),
+        "c3": conv_init(ks[2], 3, 3, 2 * w, 4 * w, dtype),
+        "c4": conv_init(ks[3], 3, 3, 4 * w, 4 * w, dtype),
+        "f1": he_linear_init(ks[4], 4 * w * spatial, 512, dtype=dtype),
+        "f2": he_linear_init(ks[5], 512, 256, dtype=dtype),
+        "f3": he_linear_init(ks[6], 256, 128, dtype=dtype),
+        "head": he_linear_init(ks[7], 128, n_classes, dtype=dtype),
+    }
+
+
+def cnn_features(params, x):
+    """x (B,32,32,3) -> penultimate features (B,128)."""
+    x = maxpool(jax.nn.relu(conv(params["c1"], x)))          # 16
+    x = maxpool(jax.nn.relu(conv(params["c2"], x)))          # 8
+    x = maxpool(jax.nn.relu(conv(params["c3"], x)))          # 4
+    x = maxpool(jax.nn.relu(conv(params["c4"], x)))          # 2
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(L.linear(params["f1"], x))
+    x = jax.nn.relu(L.linear(params["f2"], x))
+    x = jax.nn.relu(L.linear(params["f3"], x))
+    return x
+
+
+def cnn_apply(params, x):
+    return L.linear(params["head"], cnn_features(params, x))
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (GroupNorm).
+# ---------------------------------------------------------------------------
+def _basic_block_init(key, cin, cout, stride, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"conv1": conv_init(k1, 3, 3, cin, cout, dtype),
+         "gn1": L.groupnorm_init(cout, dtype),
+         "conv2": conv_init(k2, 3, 3, cout, cout, dtype),
+         "gn2": L.groupnorm_init(cout, dtype)}
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_init(k3, 1, 1, cin, cout, dtype)
+    return p
+
+
+def _basic_block(p, x, stride):
+    y = jax.nn.relu(L.groupnorm(p["gn1"], conv(p["conv1"], x, stride)))
+    y = L.groupnorm(p["gn2"], conv(p["conv2"], y))
+    sc = conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(y + sc)
+
+
+RESNET18_STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]
+
+
+def resnet18_init(rng, n_classes=100, dtype=jnp.float32):
+    ks = jax.random.split(rng, 11)
+    p: Dict = {"stem": conv_init(ks[0], 3, 3, 3, 64, dtype),
+               "gn0": L.groupnorm_init(64, dtype)}
+    cin = 64
+    i = 1
+    for si, (cout, stride) in enumerate(RESNET18_STAGES):
+        for bi in range(2):
+            st = stride if bi == 0 else 1
+            p[f"s{si}b{bi}"] = _basic_block_init(ks[i], cin, cout, st, dtype)
+            cin = cout
+            i += 1
+    p["head"] = he_linear_init(ks[i], 512, n_classes, dtype=dtype)
+    return p
+
+
+def resnet18_features(params, x):
+    x = jax.nn.relu(L.groupnorm(params["gn0"], conv(params["stem"], x)))
+    for si, (cout, stride) in enumerate(RESNET18_STAGES):
+        for bi in range(2):
+            st = stride if bi == 0 else 1
+            x = _basic_block(params[f"s{si}b{bi}"], x, st)
+    return jnp.mean(x, axis=(1, 2))                          # GAP (B,512)
+
+
+def resnet18_apply(params, x):
+    return L.linear(params["head"], resnet18_features(params, x))
+
+
+# ---------------------------------------------------------------------------
+# Uniform interface used by the federated simulator.
+# ---------------------------------------------------------------------------
+VISION_MODELS = {
+    "cnn": (cnn_init, cnn_apply, cnn_features, "head"),
+    "resnet18": (resnet18_init, resnet18_apply, resnet18_features, "head"),
+}

@@ -1,0 +1,216 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelisable —
+computed here in its attention-like parallel form, MXU friendly) and sLSTM
+(scalar memory with recurrent gate connections — a true sequential
+recurrence, lowered as lax.scan; this is the part with no parallel form).
+
+Stack layout for xlstm-350m: every 4th block is sLSTM, the rest mLSTM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner = s.expand * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "wu": L.linear_init(ks[0], d, d_inner, dtype=dtype),
+        "wz": L.linear_init(ks[8], d, d_inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, d_inner)) * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": L.linear_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "wk": L.linear_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "wv": L.linear_init(ks[4], d_inner, d_inner, dtype=dtype),
+        "w_if": L.linear_init(ks[5], d_inner, 2 * H, bias=True, dtype=dtype),
+        "norm": L.rmsnorm_init(d_inner, dtype),
+        "down": L.linear_init(ks[6], d_inner, d, dtype=dtype),
+    }
+
+
+def _mlstm_parallel(q, k, v, logi, logf):
+    """Stabilised parallel mLSTM.  q,k,v (B,L,H,P); logi/logf (B,L,H)."""
+    B, Lq, H, P = q.shape
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    logf = jax.nn.log_sigmoid(logf.astype(f32))                 # (B,L,H)
+    F = jnp.cumsum(logf, axis=1)
+    # D[i,j] = F_i - F_j + logi_j   for j <= i
+    Dmat = F[:, :, None] - F[:, None] + logi.astype(f32)[:, None]  # (B,Li,Lj,H)
+    causal = jnp.tril(jnp.ones((Lq, Lq), bool))
+    Dmat = jnp.where(causal[None, :, :, None], Dmat, -jnp.inf)
+    m = jnp.max(Dmat, axis=2, keepdims=True)                    # stabiliser
+    Dstab = jnp.exp(Dmat - m)
+    scores = jnp.einsum("bihp,bjhp->bijh", q, k) * (P ** -0.5)
+    w = scores * Dstab
+    denom = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)),
+                        jnp.exp(-m))
+    y = jnp.einsum("bijh,bjhp->bihp", w / denom, v)
+    return y
+
+
+def mlstm_forward(p, x, cfg):
+    B, Lq, _ = x.shape
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = cfg.n_heads
+    P = d_inner // H
+    u = L.linear(p["wu"], x)
+    z = L.linear(p["wz"], x)
+    # causal conv front
+    K = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    c = sum(pad[:, k:k + Lq].astype(jnp.float32) * p["conv_w"][k].astype(jnp.float32)
+            for k in range(K))
+    c = jax.nn.silu(c + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    q = L.linear(p["wq"], c).reshape(B, Lq, H, P)
+    k = L.linear(p["wk"], c).reshape(B, Lq, H, P)
+    v = L.linear(p["wv"], u).reshape(B, Lq, H, P)
+    gates = L.linear(p["w_if"], u).astype(jnp.float32)
+    logi, logf = jnp.split(gates, 2, axis=-1)                   # (B,L,H)
+    y = _mlstm_parallel(q, k, v, logi, logf).reshape(B, Lq, d_inner)
+    y = L.rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return L.linear(p["down"], y)
+
+
+def mlstm_init_cache(cfg, batch, dtype):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = cfg.n_heads
+    P = d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),          # matrix memory
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+    }
+
+
+def mlstm_decode(p, x, cache, cfg):
+    B = x.shape[0]
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = cfg.n_heads
+    P = d_inner // H
+    u = L.linear(p["wu"], x)[:, 0]                              # (B, d_inner)
+    z = L.linear(p["wz"], x)[:, 0]
+    hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)
+    c = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32))
+    c = jax.nn.silu(c + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    q = L.linear(p["wq"], c).reshape(B, H, P).astype(jnp.float32)
+    k = L.linear(p["wk"], c).reshape(B, H, P).astype(jnp.float32)
+    v = L.linear(p["wv"], u).reshape(B, H, P).astype(jnp.float32)
+    gates = L.linear(p["w_if"], u).astype(jnp.float32)
+    logi, logf = jnp.split(gates, 2, axis=-1)                   # (B,H)
+    logf = jax.nn.log_sigmoid(logf)
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    fi = jnp.exp(logf + cache["m"] - m_new)
+    ii = jnp.exp(logi - m_new)
+    k = k * (P ** -0.5)
+    C = cache["C"] * fi[..., None, None] + ii[..., None, None] * \
+        jnp.einsum("bhp,bhr->bhpr", v, k)
+    n = cache["n"] * fi[..., None] + ii[..., None] * k
+    num = jnp.einsum("bhpr,bhr->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhr,bhr->bh", n, q)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z[:, None])
+    out = L.linear(p["down"], y)
+    return out, {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    ks = jax.random.split(key, 7)
+    d_ff = int(d * 4 / 3)
+    return {
+        "wx_z": L.linear_init(ks[0], d, d, bias=True, dtype=dtype),
+        "wx_i": L.linear_init(ks[4], d, d, bias=True, dtype=dtype),
+        "wx_f": L.linear_init(ks[5], d, d, bias=True, dtype=dtype),
+        "wx_o": L.linear_init(ks[6], d, d, bias=True, dtype=dtype),
+        "r": (jax.random.normal(ks[1], (4, H, P, P)) * (P ** -0.5)).astype(dtype),
+        "norm": L.groupnorm_init(d, dtype),
+        "ffn": L.mlp_init(ks[2], d, d_ff, dtype=dtype),
+        "ffn_norm": L.rmsnorm_init(d, dtype),
+    }
+
+
+def _slstm_cell(p, xg, state, H, P):
+    """One step.  xg = (z_in, i_in, f_in, o_in) pre-computed projections,
+    each (B, d); state = (c, n, h, m) each (B, H, P) except m (B, H)."""
+    c, n, h, m = state
+    f32 = jnp.float32
+    z_in, i_in, f_in, o_in = (g.astype(f32) for g in xg)
+    B = z_in.shape[0]
+    hz = h.reshape(B, H, P)
+    rec = jnp.einsum("ghpq,bhq->gbhp", p["r"].astype(f32), hz)   # (4,B,H,P)
+    shp = (B, H, P)
+    z = jnp.tanh(z_in.reshape(shp) + rec[0])
+    logi = i_in.reshape(shp) + rec[1]
+    logf = jax.nn.log_sigmoid(f_in.reshape(shp) + rec[2])
+    o = jax.nn.sigmoid(o_in.reshape(shp) + rec[3])
+    m_new = jnp.maximum(logf + m[..., None], logi).max(-1)       # (B,H) shared stabiliser
+    fi = jnp.exp(logf + m[..., None] - m_new[..., None])
+    ii = jnp.exp(logi - m_new[..., None])
+    c_new = fi * c + ii * z
+    n_new = fi * n + ii
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, cfg):
+    B, Lq, d = x.shape
+    H = cfg.n_heads
+    P = d // H
+    xg = tuple(L.linear(p[k], x) for k in ("wx_z", "wx_i", "wx_f", "wx_o"))
+    zeros = jnp.zeros((B, H, P), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((B, H), -1e30, jnp.float32))
+
+    def step(state, xt):
+        new = _slstm_cell(p, xt, state, H, P)
+        return new, new[2]                                       # emit h
+    _, hs = jax.lax.scan(step, state0,
+                         tuple(jnp.moveaxis(g, 1, 0) for g in xg))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, Lq, d).astype(x.dtype)
+    y = L.groupnorm(p["norm"], y, groups=H, eps=cfg.norm_eps)
+    y = y + L.mlp(p["ffn"], L.rmsnorm(p["ffn_norm"], y, cfg.norm_eps))
+    return y
+
+
+def slstm_init_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": z, "n": z, "h": z,
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, x, cache, cfg):
+    B = x.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    xg = tuple(L.linear(p[k], x)[:, 0] for k in ("wx_z", "wx_i", "wx_f",
+                                                 "wx_o"))
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_cell(p, xg, state, H, P)
+    y = h.reshape(B, 1, d).astype(x.dtype)
+    y = L.groupnorm(p["norm"], y, groups=H, eps=cfg.norm_eps)
+    y = y + L.mlp(p["ffn"], L.rmsnorm(p["ffn_norm"], y, cfg.norm_eps))
+    return y, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, momentum_init,
+                                    momentum_update, sgd_update)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine

@@ -1,0 +1,51 @@
+"""Minimal optimizers over parameter pytrees (no optax dependency).
+
+The FL strategies own the *server* update; these are used for (a) local
+client steps when a strategy wants plain momentum SGD, and (b) centralized
+(non-federated) baselines in the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as T
+
+
+def sgd_update(params, grads, lr, weight_decay=0.0):
+    if weight_decay:
+        grads = T.axpy(weight_decay, params, grads)
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+
+
+def momentum_init(params):
+    return T.zeros_like(params)
+
+
+def momentum_update(params, grads, state, lr, beta=0.9, weight_decay=0.0,
+                    nesterov=False):
+    if weight_decay:
+        grads = T.axpy(weight_decay, params, grads)
+    m = T.axpy(beta, state, grads)
+    upd = T.axpy(beta, m, grads) if nesterov else m
+    return jax.tree.map(lambda p, u: p - lr * u, params, upd), m
+
+
+def adamw_init(params):
+    return {"m": T.zeros_like(params), "v": T.zeros_like(params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, mi, vi):
+        mh = mi / bc1
+        vh = vi / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (round-indexed for FL, step-indexed otherwise)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr, total, floor=0.0):
+    def f(t):
+        frac = jnp.clip(t / max(total, 1), 0.0, 1.0)
+        return floor + (lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return f
+
+
+def warmup_cosine(lr, warmup, total, floor=0.0):
+    cos = cosine_decay(lr, max(total - warmup, 1), floor)
+    def f(t):
+        w = jnp.clip(t / max(warmup, 1), 0.0, 1.0)
+        return jnp.where(t < warmup, lr * w, cos(t - warmup))
+    return f

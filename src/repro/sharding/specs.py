@@ -1,0 +1,193 @@
+"""Sharding rules for the pod engine.
+
+Layout: 2-D (data, model) mesh per pod; optional leading "pod" axis.
+
+* parameters — FSDP over "data" on the non-TP dim, tensor-parallel over
+  "model" on the contraction-friendly dim (column-parallel for up/qkv
+  projections, row-parallel for down/output projections, expert-parallel on
+  the expert dim for MoE).
+* FL server state (momentum m, control variates) — same spec as the
+  parameter it mirrors: the FedADC momentum is a full-size vector and MUST
+  shard exactly like θ or every round pays a reshard.
+* batches — client dims replicated/pod-sharded, sample dim over "data".
+* decode caches — batch over "data" when divisible, else sequence; heads
+  over "model" when divisible, else head_dim.
+
+Every rule is divisibility-guarded: a dim that doesn't divide its mesh axis
+falls back to replicated rather than failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# param dict keys (the name of the dict that owns the "w"/"b" leaf)
+COLUMN_PARALLEL = {
+    "wq", "wk", "wv", "wuq", "wuk", "wuv", "wdq", "wdkv", "gate", "up",
+    "in_proj", "wx", "w_if", "fc1", "f1", "f2", "f3", "head", "router",
+    "vis_proj", "lm_head",
+}
+ROW_PARALLEL = {"wo", "down", "out_proj", "fc2"}
+
+
+def _axis(mesh: Mesh, name):
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= _axis(mesh, a)
+        return n
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(dim: int, mesh: Mesh, axis: str):
+    return axis if dim % max(_axis(mesh, axis), 1) == 0 else None
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def spec_for_param(path, shape, mesh: Mesh, fsdp="data", tp="model",
+                   mode="train"):
+    """mode="train": FSDP×TP (params gathered per use — right when the same
+    weights are re-read H×CS times per round and HBM is the binding
+    constraint).  mode="serve": no FSDP — dense weights TP-sharded and
+    replicated over "data", MoE experts expert-parallel over "data" × TP
+    over "model"; eliminates the per-layer param all-gathers that dominate
+    the inference collective term (§Perf iteration 6)."""
+    keys = _path_keys(path)
+    owner = keys[-2] if len(keys) >= 2 else keys[-1]
+    leafname = keys[-1]
+    rank = len(shape)
+    if mode == "serve":
+        fsdp = None
+
+    def guard(spec):
+        # enforce divisibility dim-by-dim; pad leading None for stacked runs
+        out = [None] * rank
+        trailing = len(spec)
+        for i, ax in enumerate(spec):
+            dim_idx = rank - trailing + i
+            if dim_idx < 0 or ax is None:
+                continue
+            if shape[dim_idx] % max(_axis(mesh, ax), 1) == 0:
+                out[dim_idx] = ax
+        return P(*out)
+
+    if leafname == "emb":
+        return guard((tp, fsdp))
+    if owner == "experts":                       # (E, d, f) / (E, f, d)
+        if mode == "serve":                      # expert-parallel over data
+            if leafname in ("gate", "up"):
+                return guard(("data", None, tp))
+            return guard(("data", tp, None))     # down
+        if leafname in ("gate", "up"):
+            return guard((tp, fsdp, None))
+        return guard((tp, None, fsdp))           # down
+    if leafname in ("conv_w", "conv_b", "A_log", "D", "dt_bias", "scale",
+                    "bias", "r"):
+        return P(*([None] * rank))
+    if leafname == "pos_dec":
+        return guard((None, fsdp))
+    if leafname == "b":
+        return P(*([None] * rank))
+    if leafname == "w" or owner in COLUMN_PARALLEL | ROW_PARALLEL:
+        name = owner if leafname in ("w", "b") else leafname
+        if name in COLUMN_PARALLEL:
+            return guard((fsdp, tp))
+        if name in ROW_PARALLEL:
+            return guard((tp, fsdp))
+    return P(*([None] * rank))
+
+
+def param_shardings(params_shapes, mesh: Mesh, fsdp="data", tp="model",
+                    mode="train", fsdp_over_pod=False, tp_off=False):
+    if fsdp_over_pod and "pod" in mesh.shape:
+        fsdp = ("pod", "data")
+    if tp_off:
+        # sub-1B archs: L²-sized TP partial-sum all-reduces (e.g. the mLSTM
+        # parallel form contracting the sharded P dim) dwarf the param
+        # traffic — pure FSDP/data-parallel wins (§Perf iteration 11)
+        tp = None
+    """ShapeDtypeStruct/array pytree -> NamedSharding pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    shardings = [NamedSharding(mesh, spec_for_param(p, np.shape(l), mesh,
+                                                    fsdp, tp, mode=mode))
+                 for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+def spec_for_cache(path, shape, mesh: Mesh, data="data", tp="model"):
+    keys = _path_keys(path)
+    leafname = keys[-1]
+    rank = len(shape)
+    if leafname == "kpos" or rank <= 1:
+        return P(*([None] * rank))
+
+    def pick(dims):
+        """dims: list of (dim_idx, axis_pref) tried in order per axis."""
+        out = [None] * rank
+        used = set()
+        for dim_idx, ax in dims:
+            if dim_idx >= rank or ax in used or out[dim_idx] is not None:
+                continue
+            if shape[dim_idx] % max(_axis(mesh, ax), 1) == 0 \
+                    and shape[dim_idx] >= _axis(mesh, ax):
+                out[dim_idx] = ax
+                used.add(ax)
+        return P(*out)
+
+    # layouts: stacked-run caches have a leading layer dim
+    off = 1 if rank >= 4 or (rank == 3 and leafname in ("kpos",)) else 0
+    if leafname in ("k", "v", "xk", "xv"):       # (L?, B, S, Hk, hd)
+        b, s, h, d = rank - 4, rank - 3, rank - 2, rank - 1
+        return pick([(b, data), (s, data), (h, tp), (d, tp)])
+    if leafname in ("c_kv", "k_rope"):           # (L?, B, S, r)
+        b, s, r = rank - 3, rank - 2, rank - 1
+        return pick([(b, data), (s, data), (r, tp)])
+    if leafname == "h":                          # (L?, B, H, N, P)
+        b, h, n, p = rank - 4, rank - 3, rank - 2, rank - 1
+        return pick([(b, data), (h, tp), (p, tp), (n, data)])
+    if leafname == "C":                          # mlstm (L?, B, H, P, P)
+        b, h, p1, p2 = rank - 4, rank - 3, rank - 2, rank - 1
+        return pick([(b, data), (h, tp), (p1, tp), (p2, data)])
+    if leafname in ("n", "m", "conv", "c"):
+        b = rank - 2 if leafname in ("n", "c") else rank - 2
+        # generic: try batch dim then last dim
+        return pick([(rank - 3 if rank >= 3 else 0, data), (rank - 1, tp)])
+    return P(*([None] * rank))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, data="data", tp="model"):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    shardings = [NamedSharding(mesh, spec_for_cache(p, np.shape(l), mesh,
+                                                    data, tp))
+                 for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+def train_batch_spec(mesh: Mesh, multi_pod: bool):
+    """tokens/labels (CP, CS, H, b, L): client-parallel dim over "pod"."""
+    lead = "pod" if (multi_pod and "pod" in mesh.shape) else None
+    return P(lead, None, None, "data", None)
+
+
+def serve_batch_spec(mesh: Mesh, batch: int, multi_pod: bool):
+    axes = []
+    if multi_pod and "pod" in mesh.shape and batch % (
+            _axis(mesh, "pod") * _axis(mesh, "data")) == 0:
+        axes = [("pod", "data")]
+    elif batch % _axis(mesh, "data") == 0:
+        axes = ["data"]
+    else:
+        axes = [None]
+    return P(axes[0], None)

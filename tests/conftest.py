@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device flag belongs ONLY
+# to the dry-run).  Force float32 matmuls for reproducible allclose bounds.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

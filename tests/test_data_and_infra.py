@@ -1,0 +1,149 @@
+"""Partitioners, client selection, checkpointing, schedules, optimizers."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.selection import class_coverage_selection, random_selection
+from repro.data.partition import (class_counts, dirichlet_partition,
+                                  sort_and_partition)
+from repro.data.synthetic import make_image_dataset, make_token_dataset
+from repro.optim import (adamw_init, adamw_update, momentum_init,
+                         momentum_update, sgd_update, warmup_cosine)
+
+
+class TestPartition:
+    @settings(max_examples=15, deadline=None)
+    @given(s=st.integers(1, 5), n_clients=st.integers(2, 20),
+           seed=st.integers(0, 10))
+    def test_sort_partition_label_budget(self, s, n_clients, seed):
+        from hypothesis import assume
+        # label budget needs block size ≤ class size (the paper's regime:
+        # 100 clients, s∈{2,3,4}, 10 balanced classes of 5000)
+        assume(n_clients * s >= 10)
+        rng = np.random.RandomState(seed)
+        labels = rng.permutation(np.repeat(np.arange(10), 100)).astype(int)
+        parts = sort_and_partition(labels, n_clients, s, seed)
+        # exact cover, no duplication
+        allidx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(allidx, np.sort(np.argsort(labels)))
+        # each client sees at most 2s distinct labels (each of its s sorted
+        # blocks can straddle one label boundary)
+        for p in parts:
+            assert len(np.unique(labels[p])) <= 2 * s
+
+    @settings(max_examples=10, deadline=None)
+    @given(alpha=st.floats(0.05, 10.0), seed=st.integers(0, 5))
+    def test_dirichlet_exact_cover(self, alpha, seed):
+        rng = np.random.RandomState(seed)
+        labels = rng.randint(0, 10, size=2000)
+        parts = dirichlet_partition(labels, 10, alpha, seed)
+        allidx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(allidx, np.arange(2000))
+
+    def test_dirichlet_skew_monotone(self):
+        labels = np.random.RandomState(0).randint(0, 10, size=20000)
+        def skew(alpha):
+            parts = dirichlet_partition(labels, 20, alpha, 0)
+            cts = class_counts(labels, parts, 10)
+            props = cts / cts.sum(1, keepdims=True)
+            return float(np.mean(props.max(1)))
+        assert skew(0.1) > skew(10.0)   # smaller α ⇒ more skew
+
+    def test_class_counts(self):
+        labels = np.array([0, 0, 1, 2, 2, 2])
+        parts = [np.array([0, 1, 2]), np.array([3, 4, 5])]
+        cts = class_counts(labels, parts, 3)
+        np.testing.assert_array_equal(cts, [[2, 1, 0], [0, 0, 3]])
+
+
+class TestSelection:
+    def test_coverage_selector_covers(self):
+        rng = np.random.RandomState(0)
+        # 10 clients each holding exactly one class of 5
+        counts = np.zeros((10, 5))
+        for i in range(10):
+            counts[i, i % 5] = 10
+        for _ in range(20):
+            pick = class_coverage_selection(rng, 10, 5, counts)
+            assert (counts[pick].sum(0) > 0).all()
+
+    def test_random_selector_no_replacement(self):
+        rng = np.random.RandomState(0)
+        pick = random_selection(rng, 10, 10)
+        assert len(set(pick.tolist())) == 10
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                           "c": [jnp.zeros(2), jnp.ones(3)]}}
+        save_checkpoint(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        like = jax.tree.map(jnp.zeros_like, tree)
+        restored = restore_checkpoint(str(tmp_path), 7, like)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"a": jnp.ones((2, 2))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), 0, {"a": jnp.ones((3, 3))})
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"a": jnp.ones(2)})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), 0, {"b": jnp.ones(2)})
+
+
+class TestOptim:
+    def test_sgd_descends_quadratic(self):
+        p = {"w": jnp.array([4.0, -2.0])}
+        for _ in range(50):
+            g = p
+            p = sgd_update(p, g, 0.1)
+        assert float(jnp.abs(p["w"]).max()) < 0.1
+
+    def test_momentum_faster_than_sgd_on_illconditioned(self):
+        A = jnp.array([1.0, 25.0])
+        def grad(p): return {"w": A * p["w"]}
+        p_s = {"w": jnp.array([1.0, 1.0])}
+        p_m, m = {"w": jnp.array([1.0, 1.0])}, momentum_init({"w": jnp.zeros(2)})
+        for _ in range(60):
+            p_s = sgd_update(p_s, grad(p_s), 0.03)
+            p_m, m = momentum_update(p_m, grad(p_m), m, 0.03, beta=0.9)
+        assert float(jnp.abs(p_m["w"]).sum()) < float(jnp.abs(p_s["w"]).sum())
+
+    def test_adamw_decouples_weight_decay(self):
+        p = {"w": jnp.array([1.0])}
+        st_ = adamw_init(p)
+        p2, _ = adamw_update(p, {"w": jnp.zeros(1)}, st_, lr=0.1,
+                             weight_decay=0.5)
+        np.testing.assert_allclose(p2["w"], 0.95)   # only decay moves it
+
+    def test_warmup_cosine(self):
+        f = warmup_cosine(1.0, warmup=10, total=110)
+        assert float(f(0)) == 0.0
+        np.testing.assert_allclose(float(f(10)), 1.0, atol=1e-6)
+        assert float(f(110)) < 0.01
+
+
+class TestSyntheticData:
+    def test_image_dataset_learnable_structure(self):
+        x, y, xt, yt = make_image_dataset(200, 50, 5, image_size=8, seed=0)
+        assert x.shape == (200, 8, 8, 3) and y.max() < 5
+        # class templates separate in pixel space (centroid distance >> 0)
+        mus = np.stack([x[y == c].mean(0) for c in range(5)])
+        d = np.linalg.norm(mus[0] - mus[1])
+        assert d > 0.05
+
+    def test_token_dataset_domain_structure(self):
+        toks, doms = make_token_dataset(20, 64, 256, seed=0)
+        assert toks.shape == (20, 64) and toks.max() < 256
+        assert doms.shape == (20,)

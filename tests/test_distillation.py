@@ -1,0 +1,103 @@
+"""Self-confidence KD (Sec. III) invariants + baseline loss sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distillation as D
+
+
+def logits_pair(seed, B=16, C=10):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(k1, (B, C)), jax.random.normal(k2, (B, C)),
+            jax.random.randint(k3, (B,), 0, C))
+
+
+class TestSelfConfidenceTargets:
+    def test_targets_are_distribution(self):
+        s, t, y = logits_pair(0)
+        rho = jnp.linspace(0.1, 1.0, 10)
+        tgt = D.self_confidence_targets(t, y, rho, tau=1.0)
+        np.testing.assert_allclose(tgt.sum(-1), 1.0, rtol=1e-5)
+        assert bool(jnp.all(tgt >= -1e-6))
+
+    def test_iid_reduces_to_onehot(self):
+        """Paper claim: iid data ⇒ ρ_i ≈ 1 ∀i ⇒ target ≈ one-hot ⇒ loss ≈ CE."""
+        s, t, y = logits_pair(1)
+        rho = jnp.ones(10)
+        tgt = D.self_confidence_targets(t, y, rho, tau=1.0)
+        onehot = jax.nn.one_hot(y, 10)
+        np.testing.assert_allclose(tgt, onehot, atol=1e-6)
+
+    def test_iid_loss_is_ce_scaled(self):
+        s, t, y = logits_pair(2)
+        counts = jnp.full((10,), 100.0)       # perfectly balanced client
+        loss, aux = D.self_confidence_kd_loss(s, t, y, counts, lam=0.35,
+                                              tau=1.0)
+        # KD term against one-hot at tau=1 IS the CE, so loss == CE
+        np.testing.assert_allclose(loss, aux["ce"], rtol=1e-4)
+
+    def test_missing_class_gets_full_teacher_mass(self):
+        """ρ_i = 0 for a class absent locally ⇒ the teacher's opinion on it
+        is fully preserved (no unintended forgetting)."""
+        s, t, y = logits_pair(3)
+        rho = jnp.ones(10).at[7].set(0.0)
+        tgt = D.self_confidence_targets(t, y, rho, tau=1.0)
+        pt = D.softmax_T(t, 1.0)
+        nontrue = (y != 7)
+        np.testing.assert_allclose(tgt[nontrue, 7], pt[nontrue, 7], rtol=1e-5)
+
+    def test_class_confidence_normalisation(self):
+        counts = jnp.array([10.0, 40.0, 0.0, 20.0])
+        rho = D.class_confidence(counts)
+        np.testing.assert_allclose(rho, [0.25, 1.0, 0.0, 0.5])
+
+
+class TestBaselineLosses:
+    def test_kl_nonnegative(self):
+        s, t, y = logits_pair(4)
+        kl = D.kl_loss(s, D.softmax_T(t, 1.0), 1.0)
+        assert float(kl) >= 0
+
+    def test_kl_zero_iff_equal(self):
+        s, _, _ = logits_pair(5)
+        kl = D.kl_loss(s, D.softmax_T(s, 1.0), 1.0)
+        np.testing.assert_allclose(kl, 0.0, atol=1e-5)
+
+    def test_fedntd_ignores_true_class_logit(self):
+        """FedNTD's KD term must be invariant to the teacher's true-class
+        logit (distillation on non-true classes only)."""
+        s, t, y = logits_pair(6)
+        l1, _ = D.fedntd_loss(s, t, y, beta=1.0, tau=1.0)
+        t_shift = t + 5.0 * jax.nn.one_hot(y, 10)
+        l2, _ = D.fedntd_loss(s, t_shift, y, beta=1.0, tau=1.0)
+        np.testing.assert_allclose(l1, l2, rtol=1e-4)
+
+    def test_fedrs_scales_absent_classes(self):
+        logits = jnp.ones((4, 10))
+        present = jnp.zeros(10).at[jnp.array([0, 1])].set(1.0)
+        out = D.fedrs_logits(logits, present, alpha=0.5)
+        np.testing.assert_allclose(out[:, :2], 1.0)
+        np.testing.assert_allclose(out[:, 2:], 0.5)
+
+    def test_moon_prefers_global_features(self):
+        k = jax.random.PRNGKey(7)
+        z_g = jax.random.normal(k, (8, 32))
+        z_p = -z_g
+        loss_aligned = D.moon_loss(z_g, z_g, z_p, mu=1.0, temperature=0.5)
+        loss_opposed = D.moon_loss(z_p, z_g, z_p, mu=1.0, temperature=0.5)
+        assert float(loss_aligned) < float(loss_opposed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tau=st.floats(0.25, 4.0), lam=st.floats(0.0, 1.0), seed=st.integers(0, 50))
+def test_property_targets_always_distribution(tau, lam, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t = jax.random.normal(k1, (8, 6)) * 3
+    y = jax.random.randint(k2, (8,), 0, 6)
+    rho = jax.random.uniform(k3, (6,))
+    tgt = D.self_confidence_targets(t, y, rho, tau)
+    np.testing.assert_allclose(tgt.sum(-1), 1.0, rtol=1e-4)
+    # true-class mass ≥ teacher's damped leftover (sanity: finite + in [0,1+eps])
+    assert bool(jnp.all(jnp.isfinite(tgt)))

@@ -1,0 +1,96 @@
+"""Integration: the use_pallas code paths inside the models produce the same
+numerics as the default jnp paths (interpret mode on CPU), and the pod
+engine runs the paper's variants end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import FedConfig, RunConfig
+from repro.launch.train import init_state, make_train_step
+from repro.models.registry import get_model
+
+
+def _mk_batch(cfg, B=2, L=128):
+    tokens = (jax.random.randint(jax.random.PRNGKey(1), (B, L), 0,
+                                 cfg.vocab_size)).astype(jnp.int32)
+    return {"tokens": tokens, "labels": tokens}
+
+
+def test_mamba2_pallas_path_matches_jnp():
+    cfg = ARCHS["zamba2-1.2b"].reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    batch = _mk_batch(cfg)
+    a, _ = model.forward(params, batch, cfg, use_pallas=False)
+    b, _ = model.forward(params, batch, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=5e-3,
+                               rtol=5e-3)
+
+
+def test_attention_pallas_path_matches_jnp():
+    cfg = ARCHS["mistral-large-123b"].reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    batch = _mk_batch(cfg)
+    a, _ = model.forward(params, batch, cfg, use_pallas=False)
+    b, _ = model.forward(params, batch, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=5e-3,
+                               rtol=5e-3)
+
+
+@pytest.mark.parametrize("strategy", ["fedadc_double", "fedprox", "slowmo"])
+def test_pod_engine_strategy_variants(strategy):
+    cfg = ARCHS["qwen3-4b"].reduced()
+    fed = FedConfig(strategy=strategy, clients_per_round=2, local_steps=2,
+                    eta=0.01)
+    run = RunConfig(remat="none")
+    state = init_state(jax.random.PRNGKey(0), cfg, fed, run)
+    step = jax.jit(make_train_step(cfg, fed, run))
+    batch1 = _mk_batch(cfg, 2, 32)
+    batch = jax.tree.map(lambda x: jnp.broadcast_to(x, (1, 2, 2) + x.shape),
+                         batch1)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_pod_engine_fedadc_plus_distill():
+    """FedADC+ on the pod engine: self-confidence KD with token-frequency ρ."""
+    cfg = ARCHS["qwen3-4b"].reduced()
+    fed = FedConfig(strategy="fedadc", clients_per_round=2, local_steps=2,
+                    eta=0.01, distill=True, distill_lambda=0.35)
+    run = RunConfig(remat="none")
+    state = init_state(jax.random.PRNGKey(0), cfg, fed, run)
+    step = jax.jit(make_train_step(cfg, fed, run))
+    batch1 = _mk_batch(cfg, 2, 32)
+    batch = jax.tree.map(lambda x: jnp.broadcast_to(x, (1, 2, 2) + x.shape),
+                         batch1)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_pod_engine_rejects_stateful_strategies():
+    cfg = ARCHS["qwen3-4b"].reduced()
+    fed = FedConfig(strategy="scaffold")
+    with pytest.raises(ValueError):
+        make_train_step(cfg, fed, RunConfig())
+
+
+def test_mixed_precision_round_preserves_master_dtype():
+    cfg = ARCHS["qwen3-4b"].reduced()
+    fed = FedConfig(strategy="fedadc", clients_per_round=2, local_steps=2,
+                    eta=0.01)
+    run = RunConfig(param_dtype="float32", compute_dtype="bfloat16")
+    state = init_state(jax.random.PRNGKey(0), cfg, fed, run)
+    step = jax.jit(make_train_step(cfg, fed, run))
+    batch1 = _mk_batch(cfg, 2, 32)
+    batch = jax.tree.map(lambda x: jnp.broadcast_to(x, (1, 2, 2) + x.shape),
+                         batch1)
+    new_state, _ = step(state, batch)
+    for leaf in jax.tree.leaves(new_state["params"]):
+        assert leaf.dtype == jnp.float32      # f32 master survives
+    for leaf in jax.tree.leaves(new_state["server"]["m"]):
+        assert leaf.dtype == jnp.float32

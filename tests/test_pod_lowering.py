@@ -1,0 +1,75 @@
+"""Regression tests for the dry-run lowering machinery on the 1×1 host mesh
+(the 512-device production lowering is exercised by launch/dryrun.py; these
+pin the ShapeDtypeStruct/sharding plumbing so it cannot rot)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import FedConfig, RunConfig, ShapeConfig
+from repro.launch import inputs as I
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import make_prefill_step, make_serve_step
+from repro.launch.train import make_train_step
+
+SMALL_TRAIN = ShapeConfig("train_small", seq_len=64, global_batch=16,
+                          kind="train")
+SMALL_PREFILL = ShapeConfig("prefill_small", seq_len=128, global_batch=2,
+                            kind="prefill")
+SMALL_DECODE = ShapeConfig("decode_small", seq_len=128, global_batch=2,
+                           kind="decode")
+
+FED = FedConfig(strategy="fedadc", clients_per_round=2, local_steps=2,
+                eta=0.05)
+RUN = RunConfig(remat="none")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-1.2b",
+                                  "llama4-scout-17b-a16e", "whisper-small"])
+def test_train_step_lowers_on_host_mesh(arch):
+    mcfg = ARCHS[arch].reduced()
+    mesh = make_host_mesh()
+    with mesh:
+        state_sds = I.state_inputs(mcfg, FED, RUN, mesh)
+        batch_sds = I.train_inputs(mcfg, SMALL_TRAIN, FED, mesh, False)
+        step = make_train_step(mcfg, FED, RUN)
+        compiled = jax.jit(step).lower(state_sds, batch_sds).compile()
+        assert compiled.cost_analysis() is not None
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "internvl2-26b"])
+def test_prefill_lowers_on_host_mesh(arch):
+    mcfg = ARCHS[arch].reduced()
+    mesh = make_host_mesh()
+    with mesh:
+        state_sds = I.state_inputs(mcfg, FED, RUN, mesh, mode="serve")
+        batch_sds = I.prefill_inputs(mcfg, SMALL_PREFILL, mesh, False)
+        step = make_prefill_step(mcfg)
+        compiled = jax.jit(step).lower(state_sds["params"],
+                                       batch_sds).compile()
+        assert compiled is not None
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "xlstm-350m",
+                                  "deepseek-v3-671b"])
+def test_serve_step_lowers_on_host_mesh(arch):
+    mcfg = ARCHS[arch].reduced()
+    mesh = make_host_mesh()
+    with mesh:
+        state_sds = I.state_inputs(mcfg, FED, RUN, mesh, mode="serve")
+        cache_sds, tokens, cur_pos = I.decode_inputs(mcfg, SMALL_DECODE,
+                                                     mesh, False,
+                                                     cache_dtype=jnp.float32)
+        step = make_serve_step(mcfg)
+        compiled = jax.jit(step).lower(state_sds["params"], cache_sds,
+                                       tokens, cur_pos).compile()
+        assert compiled is not None
+
+
+def test_round_decomposition_exact():
+    from repro.launch.inputs import round_decomposition
+    mesh = make_host_mesh()
+    fed = FedConfig(clients_per_round=4, local_steps=4)
+    from repro.configs.base import SHAPES
+    CP, CS, H, b = round_decomposition(SHAPES["train_4k"], fed, mesh, False)
+    assert CP * CS == 4 and H == 4 and CP * CS * H * b == 256

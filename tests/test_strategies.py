@@ -1,0 +1,249 @@
+"""FL strategy algebra tests — the paper's equations hold exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FedConfig
+from repro.core import tree as T
+from repro.core.strategies import get_strategy
+
+
+def quad_grad(target):
+    """grad of 1/2‖θ − target‖² (θ-dependent, well-behaved)."""
+    def grad_fn(theta, _):
+        g = jax.tree.map(lambda t, tt: t - tt, theta, target)
+        return g, jnp.zeros(())
+    return grad_fn
+
+
+def const_grad(gval):
+    def grad_fn(theta, _):
+        return jax.tree.map(lambda g: g, gval), jnp.zeros(())
+    return grad_fn
+
+
+def run_round(strategy_name, fed, theta, grad_fn, server_state=None,
+              n_clients=3):
+    s = get_strategy(strategy_name)
+    server_state = server_state if server_state is not None \
+        else s.server_init(theta)
+    ctx = s.client_setup(server_state, theta, fed)
+    deltas = []
+    for i in range(n_clients):
+        th = theta
+        extra = s.init_extra(theta, fed)
+        for tau in range(fed.local_steps):
+            th, extra, _ = s.local_step(th, ctx, grad_fn, None, fed, extra)
+        deltas.append(T.sub(theta, th))
+    mean_delta = jax.tree.map(lambda *ds: sum(ds) / len(ds), *deltas)
+    new_theta, new_state = s.server_update(server_state, theta, mean_delta,
+                                           fed)
+    return new_theta, new_state, mean_delta
+
+
+def make_theta(seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    return {"w": jax.random.normal(k1, (4, 3)),
+            "b": jax.random.normal(k2, (3,))}
+
+
+class TestFedADCAlgebra:
+    def test_eq4_delta_decomposition(self):
+        """Eq. (4): Δ = η(Σ_τ g_τ + β_local·m) for the heavy-ball variant."""
+        fed = FedConfig(strategy="fedadc", variant="heavyball",
+                        local_steps=5, eta=0.07, beta_local=0.6,
+                        beta_global=0.6)
+        theta = make_theta()
+        m = jax.tree.map(lambda x: x * 0.3 + 0.1, theta)
+        g = jax.tree.map(lambda x: x * 0.05 - 0.02, theta)  # constant grads
+        s = get_strategy("fedadc")
+        ctx = s.client_setup({"m": m}, theta, fed)
+        th, extra = theta, s.init_extra(theta, fed)
+        for _ in range(fed.local_steps):
+            th, extra, _ = s.local_step(th, ctx, const_grad(g), None, fed,
+                                        extra)
+        delta = T.sub(theta, th)
+        expect = jax.tree.map(
+            lambda gi, mi: fed.eta * (fed.local_steps * gi
+                                      + fed.beta_local * mi), g, m)
+        for a, b in zip(jax.tree.leaves(delta), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_eq5_server_momentum_matches_slowmo_form(self):
+        """After the (β_g − β_l)m correction, the pseudo momentum equals the
+        SlowMo recursion β·m + ḡ on constant gradients (Sec. II)."""
+        fed = FedConfig(strategy="fedadc", variant="heavyball", local_steps=4,
+                        eta=0.05, beta_local=0.8, beta_global=0.8, alpha=1.0)
+        theta = make_theta(1)
+        g = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, theta)
+        m0 = jax.tree.map(lambda x: jnp.ones_like(x) * 0.5, theta)
+        _, new_state, _ = run_round("fedadc", fed, theta, const_grad(g),
+                                    {"m": m0})
+        # SlowMo form: m' = β·m + Σ_τ g  (ḡ = Δ/η with H local steps)
+        expect = jax.tree.map(
+            lambda mi, gi: fed.beta_global * mi + fed.local_steps * gi,
+            m0, g)
+        for a, b in zip(jax.tree.leaves(new_state["m"]),
+                        jax.tree.leaves(expect)):
+            np.testing.assert_allclose(a, b, rtol=1e-5)
+
+    def test_fedadc_beta0_equals_fedavg(self):
+        """β_local = β_global = 0, α = 1 ⇒ FedADC degenerates to FedAvg."""
+        fed0 = FedConfig(strategy="fedadc", variant="heavyball",
+                         local_steps=3, eta=0.1, beta_local=0.0,
+                         beta_global=0.0, alpha=1.0)
+        fedavg = FedConfig(strategy="fedavg", local_steps=3, eta=0.1)
+        theta = make_theta(2)
+        target = jax.tree.map(jnp.zeros_like, theta)
+        t1, _, _ = run_round("fedadc", fed0, theta, quad_grad(target))
+        t2, _, _ = run_round("fedavg", fedavg, theta, quad_grad(target))
+        for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_nesterov_vs_heavyball_same_delta_on_constant_grads(self):
+        """With θ-independent gradients the red/blue variants coincide."""
+        theta = make_theta(3)
+        g = jax.tree.map(lambda x: x * 0.02, theta)
+        outs = []
+        for variant in ("nesterov", "heavyball"):
+            fed = FedConfig(strategy="fedadc", variant=variant,
+                            local_steps=4, eta=0.05, beta_local=0.7,
+                            beta_global=0.7)
+            m = jax.tree.map(jnp.ones_like, theta)
+            s = get_strategy("fedadc")
+            ctx = s.client_setup({"m": m}, theta, fed)
+            th, extra = theta, s.init_extra(theta, fed)
+            for _ in range(4):
+                th, extra, _ = s.local_step(th, ctx, const_grad(g), None,
+                                            fed, extra)
+            outs.append(th)
+        for a, b in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+            np.testing.assert_allclose(a, b, rtol=1e-5)
+
+    def test_momentum_controls_drift(self):
+        """The paper's drift-control claim, miniaturised: two clients with
+        opposite targets.  The FedADC momentum term must shrink the spread
+        of the local models relative to FedAvg."""
+        fed = FedConfig(strategy="fedadc", variant="heavyball", local_steps=8,
+                        eta=0.2, beta_local=0.9, beta_global=0.9)
+        theta = {"w": jnp.zeros((2,))}
+        # consensus direction from history: momentum points at +1 axis
+        m = {"w": jnp.array([1.0, 0.0])}
+        targets = [{"w": jnp.array([0.0, +4.0])},
+                   {"w": jnp.array([0.0, -4.0])}]
+        s = get_strategy("fedadc")
+        ctx = s.client_setup({"m": m}, theta, fed)
+        locals_ = []
+        for tgt in targets:
+            th, extra = theta, s.init_extra(theta, fed)
+            for _ in range(fed.local_steps):
+                th, extra, _ = s.local_step(th, ctx, quad_grad(tgt), None,
+                                            fed, extra)
+            locals_.append(th["w"])
+        # both locals got pulled along the consensus direction (−m, since
+        # the server update is θ ← θ − αη·m: momentum accumulates pseudo-
+        # GRADIENTS, so parameter motion is opposite to m)
+        assert locals_[0][0] < 0 and locals_[1][0] < 0
+        # and the pull is identical — drift orthogonal to consensus
+        np.testing.assert_allclose(locals_[0][0], locals_[1][0], rtol=1e-6)
+
+
+class TestBaselines:
+    def test_fedavg_is_mean_of_locals(self):
+        fed = FedConfig(strategy="fedavg", local_steps=2, eta=0.1)
+        theta = make_theta(4)
+        target = jax.tree.map(jnp.ones_like, theta)
+        t1, _, mean_delta = run_round("fedavg", fed, theta,
+                                      quad_grad(target))
+        expect = T.sub(theta, mean_delta)
+        for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(a, b)
+
+    def test_fedprox_mu0_equals_fedavg(self):
+        theta = make_theta(5)
+        target = jax.tree.map(jnp.zeros_like, theta)
+        f1 = FedConfig(strategy="fedprox", mu_prox=0.0, local_steps=3, eta=0.1)
+        f2 = FedConfig(strategy="fedavg", local_steps=3, eta=0.1)
+        t1, _, _ = run_round("fedprox", f1, theta, quad_grad(target))
+        t2, _, _ = run_round("fedavg", f2, theta, quad_grad(target))
+        for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_fedprox_pulls_towards_global(self):
+        theta = make_theta(6)
+        target = jax.tree.map(lambda x: x + 5.0, theta)
+        small = FedConfig(strategy="fedprox", mu_prox=0.0, local_steps=5,
+                          eta=0.1)
+        big = FedConfig(strategy="fedprox", mu_prox=5.0, local_steps=5,
+                        eta=0.1)
+        t_small, _, _ = run_round("fedprox", small, theta, quad_grad(target))
+        t_big, _, _ = run_round("fedprox", big, theta, quad_grad(target))
+        d_small = T.global_norm(T.sub(t_small, theta))
+        d_big = T.global_norm(T.sub(t_big, theta))
+        assert float(d_big) < float(d_small)
+
+    def test_slowmo_accumulates_momentum(self):
+        fed = FedConfig(strategy="slowmo", local_steps=2, eta=0.1,
+                        beta_global=0.5, alpha=1.0)
+        theta = make_theta(7)
+        g = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, theta)
+        state = None
+        t = theta
+        ms = []
+        for _ in range(3):
+            t, state, _ = run_round("slowmo", fed, t, const_grad(g), state)
+            ms.append(float(T.global_norm(state["m"])))
+        assert ms[1] > ms[0] and ms[2] > ms[1]          # (1+β+β²) growth
+
+    def test_fedadc_double_no_server_carry(self):
+        fed = FedConfig(strategy="fedadc_double", local_steps=3, eta=0.05,
+                        phi=0.9, beta_global=0.8, beta_local=0.8)
+        theta = make_theta(8)
+        g = jax.tree.map(lambda x: x * 0.03, theta)
+        _, state, mean_delta = run_round("fedadc_double", fed, theta,
+                                         const_grad(g))
+        expect = T.scale(mean_delta, 1.0 / fed.eta)     # Alg.4 line 21
+        for a, b in zip(jax.tree.leaves(state["m"]), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(a, b, rtol=1e-5)
+
+    def test_scaffold_variance_reduction_identity(self):
+        """With c = c_i = true mean gradient, SCAFFOLD local updates follow
+        the global direction exactly."""
+        s = get_strategy("scaffold")
+        fed = FedConfig(strategy="scaffold", local_steps=1, eta=0.1)
+        theta = make_theta(9)
+        g_local = jax.tree.map(lambda x: x * 0.0 + 2.0, theta)
+        g_mean = jax.tree.map(lambda x: x * 0.0 + 1.0, theta)
+        ctx = {"c": g_mean}
+        extra = {"c_i": g_local}
+        th, _, _ = s.local_step(theta, ctx, const_grad(g_local), None, fed,
+                                extra)
+        # g + c − c_i = g_mean
+        expect = jax.tree.map(lambda t, gm: t - fed.eta * gm, theta, g_mean)
+        for a, b in zip(jax.tree.leaves(th), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(eta=st.floats(1e-4, 0.5), beta=st.floats(0.0, 0.95),
+       h=st.integers(1, 8))
+def test_property_eq4_holds_for_any_hparams(eta, beta, h):
+    """Property: Δ = η(Σg + β_l·m) for all (η, β, H) — heavy-ball variant,
+    constant gradients (eq. 4)."""
+    fed = FedConfig(strategy="fedadc", variant="heavyball", local_steps=h,
+                    eta=eta, beta_local=beta, beta_global=beta)
+    theta = {"w": jnp.array([1.0, -2.0, 0.5])}
+    m = {"w": jnp.array([0.3, 0.3, -0.1])}
+    g = {"w": jnp.array([0.05, -0.01, 0.02])}
+    s = get_strategy("fedadc")
+    ctx = s.client_setup({"m": m}, theta, fed)
+    th, extra = theta, s.init_extra(theta, fed)
+    for _ in range(h):
+        th, extra, _ = s.local_step(
+            th, ctx, lambda t, _: (g, jnp.zeros(())), None, fed, extra)
+    delta = th["w"] - theta["w"]
+    expect = -eta * (h * g["w"] + beta * m["w"])
+    np.testing.assert_allclose(delta, expect, rtol=2e-4, atol=1e-6)

@@ -38,6 +38,16 @@ def main(rows=None):
     rows.append(emit("kernel.fedadc_server_update.1M", us,
                      f"bytes_moved={5*n*4};vs_unfused={8*n*4}"))
 
+    # weighted-delta-reduce: K+1 vectors moved vs 2K+1 unfused (broadcast
+    # product materialised)
+    K = 8
+    stacked = {"p": jnp.ones((K, n), jnp.float32)}
+    w = jnp.full((K,), 1.0 / K)
+    us = _time(jax.jit(lambda d, ww: ops.weighted_delta_reduce(d, ww)),
+               stacked, w)
+    rows.append(emit(f"kernel.weighted_delta_reduce.K{K}.1M", us,
+                     f"bytes_moved={(K+1)*n*4};vs_unfused={(2*K+1)*n*4}"))
+
     # flash attention 1×4×512×64
     B, H, L, D = 1, 4, 512, 64
     ks = jax.random.split(jax.random.PRNGKey(0), 3)

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   kernels_bench      — Pallas kernels µs/call + derived bytes/flops
   roofline_report    — §Roofline terms per (arch × shape × mesh) from the
                        dry-run artifacts
+  straggler_bench    — wall-clock-to-accuracy, sync vs semi-async FedADC
+                       under a 4× straggler fleet (DESIGN.md §Heterogeneity)
 """
 import argparse
 import time
@@ -25,7 +27,7 @@ def main() -> None:
     from benchmarks import (ablation_beta, clustering, comm_load,
                             fig1_acceleration, fig2_robustness, fig5_scale,
                             fig7_personalization, kernels_bench, lm_round,
-                            roofline_report, table1_sota)
+                            roofline_report, straggler_bench, table1_sota)
     mods = {
         "kernels_bench": kernels_bench,
         "comm_load": comm_load,
@@ -38,6 +40,7 @@ def main() -> None:
         "clustering": clustering,
         "lm_round": lm_round,
         "ablation_beta": ablation_beta,
+        "straggler_bench": straggler_bench,
     }
     picked = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")

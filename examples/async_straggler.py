@@ -1,0 +1,51 @@
+"""Semi-async FedADC under a straggler fleet, in ~2 minutes (CPU).
+
+A quarter of the clients run 4× slower than the rest.  The synchronous
+engine (buffer_k = clients_per_round) barriers on the slowest client of every
+round; the semi-async engine applies the server update as soon as the
+fastest half of the wave arrives, discounting the momentum contribution of
+any stale delta that trickles in later.  Accuracy is plotted against the
+*virtual clock* (one unit = one local step on the reference client), so the
+comparison is wall-clock-fair.
+
+Run:  PYTHONPATH=src python examples/async_straggler.py
+"""
+from repro.configs.base import FedConfig, HeteroConfig
+from repro.data.partition import sort_and_partition
+from repro.data.synthetic import make_image_dataset
+from repro.federated.async_engine import AsyncFederatedSimulator
+from repro.federated.simulator import SimConfig
+
+
+def main():
+    x, y, xt, yt = make_image_dataset(3000, 600, n_classes=10,
+                                      image_size=16, noise=0.6, seed=0)
+    parts = sort_and_partition(y, n_clients=20, s=2, seed=0)
+    hetero = HeteroConfig(enabled=True, speed_dist="bimodal",
+                          straggler_frac=0.25, straggler_slowdown=4.0,
+                          seed=0)
+    print(f"{'mode':>6} {'rounds':>7} {'virtual time':>13} {'final acc':>10}")
+    results = {}
+    for mode, buffer_k, rounds in (("sync", 0, 20), ("semi", 4, 60)):
+        fed = FedConfig(strategy="fedadc", local_steps=8,
+                        clients_per_round=8, n_clients=20, eta=0.02,
+                        beta_global=0.7, beta_local=0.7, buffer_k=buffer_k,
+                        staleness_mode="poly", staleness_factor=0.5)
+        sim = SimConfig(model="cnn", n_classes=10, batch_size=32,
+                        rounds=rounds, eval_every=5, cnn_width=8, seed=0)
+        eng = AsyncFederatedSimulator(fed, sim, hetero, x, y, xt, yt, parts)
+        hist = eng.run()
+        results[mode] = hist
+        print(f"{mode:>6} {hist[-1]['round']:>7} {hist[-1]['t']:>13.0f} "
+              f"{hist[-1]['acc']:>10.3f}")
+    print("\naccuracy vs virtual time (semi-async reaches any level sooner):")
+    print(f"{'sync t':>8} {'acc':>8}    | {'semi t':>8} {'acc':>8}")
+    from itertools import zip_longest
+    for hs, ha in zip_longest(results["sync"], results["semi"]):
+        left = f"{hs['t']:>8.0f} {hs['acc']:>8.3f}" if hs else " " * 17
+        right = f"{ha['t']:>8.0f} {ha['acc']:>8.3f}" if ha else ""
+        print(f"{left}    | {right}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,8 @@ from __future__ import annotations
 
 from dataclasses import replace
 
-from repro.configs.base import (SHAPES, FedConfig, ModelConfig, RunConfig,
-                                ShapeConfig)
+from repro.configs.base import (SHAPES, FedConfig, HeteroConfig, ModelConfig,
+                                RunConfig, ShapeConfig)
 from repro.configs import (deepseek_v3_671b, internvl2_26b,
                            llama4_scout_17b_a16e, mistral_large_123b,
                            qwen1p5_32b, qwen3_14b, qwen3_4b, whisper_small,
@@ -45,5 +45,5 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
 
 
 __all__ = ["ARCHS", "SHAPES", "get_arch", "long_context_variant",
-           "shape_applicable", "ModelConfig", "FedConfig", "RunConfig",
-           "ShapeConfig"]
+           "shape_applicable", "ModelConfig", "FedConfig", "HeteroConfig",
+           "RunConfig", "ShapeConfig"]

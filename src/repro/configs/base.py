@@ -223,6 +223,45 @@ class FedConfig:
     weight_decay: float = 0.0
     grad_clip: float = 0.0
     use_pallas: bool = False       # fused Pallas update kernels (TPU target)
+    # server-side aggregation (shared server_aggregate hook, DESIGN.md
+    # §Heterogeneity): uniform | examples | drag
+    aggregator: str = "uniform"
+    drag_lambda: float = 4.0       # DRAG divergence temperature
+    # semi-async engine (repro.federated.async_engine)
+    buffer_k: int = 0              # server update after K deltas; 0 =>
+                                   # clients_per_round (synchronous barrier)
+    staleness_mode: str = "poly"   # none | poly ((1+s)^-a) | exp (a^s)
+    staleness_factor: float = 0.5  # `a` in the discount above
+
+
+# ---------------------------------------------------------------------------
+# Client system heterogeneity (repro.federated.hetero).  Describes the *fleet*
+# — per-client compute speed, availability, variable local work — as opposed
+# to FedConfig, which describes the *algorithm*.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HeteroConfig:
+    enabled: bool = False
+    # compute-speed distribution over clients:
+    #   constant  — all clients speed 1 (the synchronous idealisation)
+    #   lognormal — exp(sigma·N(0,1)), long right tail of slow clients
+    #   uniform   — U[speed_range]
+    #   bimodal   — straggler_frac of clients run straggler_slowdown× slower
+    speed_dist: str = "constant"
+    speed_sigma: float = 0.5
+    speed_range: Tuple[float, float] = (0.25, 1.0)
+    straggler_frac: float = 0.25
+    straggler_slowdown: float = 4.0
+    # per-client local work H_i sampled uniformly from this set; () => every
+    # client runs fed.local_steps (homogeneous work).
+    local_steps_choices: Tuple[int, ...] = ()
+    # FedNova-style normalisation: rescale Δ_i by H_ref/H_i so heterogeneous
+    # local work aggregates without objective inconsistency.
+    fednova: bool = True
+    availability: float = 1.0      # P(client reachable at dispatch time)
+    drop_prob: float = 0.0         # P(in-flight client drops; delta lost)
+    time_jitter: float = 0.0       # multiplicative jitter on round times
+    seed: int = 0
 
 
 @dataclass(frozen=True)

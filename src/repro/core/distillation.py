@@ -66,6 +66,31 @@ def self_confidence_kd_loss(student_logits, teacher_logits, labels,
     return (1.0 - lam) * ce + lam * kd, {"ce": ce, "kd": kd}
 
 
+def masked_self_confidence_kd_loss(student_logits, teacher_logits, labels,
+                                   class_counts, lam, tau, mask):
+    """Token-level FedADC+ objective with a validity mask.
+
+    The pod LM engine flattens (B, L) positions; padding positions (label
+    −100, clipped to 0 upstream) must contribute to neither the CE nor the
+    KD term, so both are computed per token and averaged over valid
+    positions only.  mask (N,) bool/0-1, aligned with the flattened logits.
+    """
+    rho = class_confidence(class_counts)
+    targets = self_confidence_targets(teacher_logits, labels, rho, tau)
+    s = student_logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    gold = jnp.take_along_axis(s, labels[..., None], axis=-1)[..., 0]
+    ce_tok = lse - gold
+    logp = jax.nn.log_softmax(s / tau, axis=-1)
+    t = jnp.clip(jax.lax.stop_gradient(targets), 1e-9, 1.0)
+    kd_tok = jnp.sum(t * (jnp.log(t) - logp), axis=-1) * tau ** 2
+    w = mask.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    ce = jnp.sum(ce_tok * w) / denom
+    kd = jnp.sum(kd_tok * w) / denom
+    return (1.0 - lam) * ce + lam * kd, {"ce": ce, "kd": kd}
+
+
 def fedgkd_loss(student_logits, teacher_logits, labels, lam, tau):
     ce = cross_entropy(student_logits, labels)
     kd = kl_loss(student_logits,

@@ -8,9 +8,14 @@ Interface (all pure functions, jit/scan friendly):
   client_setup(server_state, fed)  -> ctx broadcast to clients (e.g. m̄_t)
   local_step(theta, ctx, grad_fn, batch, fed, extra) -> (theta', extra')
        `extra` carries per-local-step state (double-momentum EMA, step idx).
+  server_aggregate(deltas, weights, fed) -> mean_delta
+       deltas stacked over clients (leading axis K); weights (K,) from the
+       pluggable aggregator (repro.federated.aggregation) — uniform,
+       example-weighted, or DRAG divergence-adaptive.
   server_update(server_state, theta_t, mean_delta, fed)
        -> (theta_{t+1}, server_state')
-  mean_delta is 1/|S| Σ_i (θ_t - θ_i^H)  (the *pseudo gradient × η*).
+  mean_delta is Σ_i w_i (θ_t - θ_i^H) / Σ_i w_i  (the *pseudo gradient × η*;
+  the paper's 1/|S| mean under uniform weights).
 
 Strategies whose clients carry cross-round state (SCAFFOLD c_i, FedDyn h_i,
 MOON previous model) additionally implement client_state_* hooks used by the
@@ -67,6 +72,13 @@ class FedAvg:
     def local_step(self, theta, ctx, grad_fn, batch, fed, extra):
         g, aux = grad_fn(theta, batch)
         return _sgd_step(theta, g, fed.eta, fed), extra, aux
+
+    def server_aggregate(self, deltas, weights, fed):
+        """Δ̄ = Σ_i w_i·Δ_i / Σ_i w_i over client-stacked deltas.  Shared by
+        every strategy; with fed.use_pallas the reduction runs as one fused
+        VMEM pass (kernels/weighted_reduce.py)."""
+        from repro.federated.aggregation import weighted_mean  # lazy: layering
+        return weighted_mean(deltas, weights, use_pallas=fed.use_pallas)
 
     def server_update(self, server_state, theta_t, mean_delta, fed):
         # θ_{t+1} = mean(θ_i^H) = θ_t - mean_delta

@@ -1,0 +1,19 @@
+"""Federated engines and the heterogeneity subsystem.
+
+* ``simulator``    — paper-scale synchronous round loop (CNN/ResNet).
+* ``async_engine`` — virtual-clock semi-async engine with staleness-corrected
+                     FedADC (buffered-K aggregation).
+* ``hetero``       — client system model: speeds, availability, variable H_i.
+* ``aggregation``  — pluggable server aggregators (uniform/examples/DRAG).
+
+See DESIGN.md §Engines and §Heterogeneity.
+"""
+from repro.federated.aggregation import compute_weights, weighted_mean
+from repro.federated.async_engine import AsyncFederatedSimulator
+from repro.federated.hetero import (ClientSystemModel, fednova_scale,
+                                    staleness_discount)
+from repro.federated.simulator import FederatedSimulator, SimConfig
+
+__all__ = ["FederatedSimulator", "SimConfig", "AsyncFederatedSimulator",
+           "ClientSystemModel", "fednova_scale", "staleness_discount",
+           "compute_weights", "weighted_mean"]

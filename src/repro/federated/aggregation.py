@@ -1,0 +1,96 @@
+"""Pluggable server aggregators (DESIGN.md §Heterogeneity).
+
+Every strategy's server step consumes Δ̄ = Σ_i w_i·Δ_i / Σ_i w_i over the
+round's client deltas.  The weight families:
+
+* ``uniform``  — the paper's 1/|S| mean (FedAvg/FedADC default).
+* ``examples`` — w_i ∝ n_i local examples (the FedAvg paper's weighting).
+* ``drag``     — DRAG-style divergence-adaptive weights: clients whose delta
+  direction diverges from a reference direction (the server momentum when the
+  strategy keeps one, else the round mean) are exponentially down-weighted,
+  w_i = exp(−λ·(1 − cos(Δ_i, ref))).  Cosine divergence is scale-invariant,
+  so the same formula serves both the η-scaled deltas of the simulator and
+  the streaming per-client weights of the pod engine.
+
+``weighted_mean`` is the one reduction everything funnels through; with
+``use_pallas`` it lowers to the fused weighted-delta-reduce kernel
+(kernels/weighted_reduce.py) — one VMEM pass over the stacked deltas.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as T
+
+_EPS = 1e-12
+
+
+def _leading_dim(deltas) -> int:
+    return jax.tree.leaves(deltas)[0].shape[0]
+
+
+def cosine_divergence(delta, ref):
+    """1 − cos(Δ, ref) over pytrees; 1.0 (neutral) when ref is ~zero."""
+    num = T.dot(delta, ref)
+    den = jnp.sqrt(T.sq_norm(delta) * T.sq_norm(ref) + _EPS)
+    return 1.0 - num / jnp.maximum(den, _EPS)
+
+
+KNOWN_AGGREGATORS = ("uniform", "examples", "drag")
+
+
+def streaming_weight(delta, ref, name: str, lam: float):
+    """Per-client scalar weight, computable without the other deltas
+    (pod-engine streaming form).  `name` is static.
+
+    `examples` is uniform here by construction: every pod-engine client
+    contributes the same (H, b, L) token budget.  `drag` requires a momentum
+    reference — the caller must reject momentum-less strategies up front
+    (there is no round mean to fall back on in streaming form)."""
+    if name not in KNOWN_AGGREGATORS:
+        raise ValueError(f"unknown aggregator {name!r}; "
+                         f"known: {', '.join(KNOWN_AGGREGATORS)}")
+    if name == "drag":
+        if ref is None:
+            raise ValueError("streaming drag weights need a momentum "
+                             "reference direction")
+        return jnp.exp(-lam * cosine_divergence(delta, ref))
+    return jnp.ones(())
+
+
+def drag_weights(deltas, ref=None, lam: float = 4.0):
+    """Divergence-adaptive weights over stacked deltas (leading axis K)."""
+    if ref is None:
+        ref = jax.tree.map(lambda d: jnp.mean(d, 0), deltas)
+    div = jax.vmap(lambda d: cosine_divergence(d, ref))(deltas)
+    return jnp.exp(-lam * div)
+
+
+def compute_weights(name: str, deltas, n_examples=None, ref=None,
+                    lam: float = 4.0):
+    """Unnormalised aggregation weights (K,) for stacked deltas."""
+    K = _leading_dim(deltas)
+    if name == "uniform":
+        return jnp.ones((K,), jnp.float32)
+    if name == "examples":
+        if n_examples is None:
+            raise ValueError("aggregator='examples' needs per-client counts")
+        return jnp.asarray(n_examples, jnp.float32)
+    if name == "drag":
+        return drag_weights(deltas, ref=ref, lam=lam)
+    raise ValueError(f"unknown aggregator {name!r}; "
+                     f"known: {', '.join(KNOWN_AGGREGATORS)}")
+
+
+def weighted_mean(deltas, weights, use_pallas: bool = False):
+    """Σ_i w_i·Δ_i / Σ_i w_i over a stacked pytree (leading axis K)."""
+    wn = weights.astype(jnp.float32) / jnp.maximum(jnp.sum(weights), _EPS)
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.weighted_delta_reduce(deltas, wn)
+    return jax.tree.map(
+        lambda d: jnp.tensordot(wn.astype(d.dtype), d, axes=([0], [0])),
+        deltas)

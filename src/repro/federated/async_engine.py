@@ -1,0 +1,233 @@
+"""Virtual-clock, event-driven semi-asynchronous federated engine.
+
+The synchronous engines barrier every round on the slowest selected client;
+under realistic speed heterogeneity (see ``repro.federated.hetero``) that
+straggler bound dominates wall-clock.  This engine removes the barrier:
+
+* a fleet of ``clients_per_round`` clients is kept in flight; each client
+  trains on the parameter version it was dispatched with and finishes after
+  ``H_i / speed_i`` units of *virtual time* (one unit = one local step on the
+  reference client);
+* finished deltas enter a server buffer; when the buffer holds
+  ``fed.buffer_k`` deltas (buffered-K aggregation; ``buffer_k == 0`` means
+  ``clients_per_round``, i.e. the synchronous barrier) the server applies one
+  update and immediately re-dispatches the freed slots with fresh parameters;
+* a delta dispatched at parameter version v and aggregated at version v+s is
+  *s versions stale*; its contribution to the FedADC momentum recursion
+  m ← (β_g−β_l)·m + Δ̄/η is damped by ``staleness_discount(s)`` so stale
+  pseudo-gradients cannot destabilise the acceleration;
+* per-client variable local work H_i is FedNova-normalised (Δ·H_ref/H_i)
+  before aggregation, and the pluggable aggregator weights (uniform /
+  examples / DRAG) apply exactly as in the synchronous engines via the
+  shared ``strategy.server_aggregate`` hook.
+
+With heterogeneity disabled the engine degenerates *exactly* to the
+synchronous simulator: equal speeds make every wave arrive together, the
+buffer flushes with staleness 0 and discount 1, and the same client-update /
+aggregation / server-update code paths (inherited from
+``FederatedSimulator``) reproduce its round trajectory to numerical
+tolerance (tested).
+
+Scheduling is a deterministic function of (fed, sim, hetero) seeds: client
+sampling draws from the simulator RandomState in dispatch order and all
+system randomness (availability, drops, jitter) draws from the
+ClientSystemModel RandomState in event order.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedConfig, HeteroConfig
+from repro.core.selection import SELECTORS
+from repro.federated import aggregation as A
+from repro.federated.hetero import ClientSystemModel, staleness_discount
+from repro.federated.simulator import FederatedSimulator, SimConfig
+
+# Strategies with per-client cross-round state cannot ride the async engine
+# (a stale client would need its state rolled forward); same restriction as
+# the pod engine (DESIGN.md §Engines).
+ASYNC_UNSUPPORTED = ("scaffold", "feddyn", "moon")
+
+
+@dataclass
+class _InFlight:
+    """One dispatched client round, finished at `finish_time`."""
+    client: int
+    version: int                  # parameter version trained against
+    delta: object                 # pytree
+    loss: float
+    n_examples: float
+    delta_scale: float            # FedNova H_ref/H_i normalisation
+    finish_time: float
+
+
+class AsyncFederatedSimulator(FederatedSimulator):
+    def __init__(self, fed: FedConfig, sim: SimConfig, hetero: HeteroConfig,
+                 x_train, y_train, x_test, y_test, parts: List[np.ndarray]):
+        if fed.strategy in ASYNC_UNSUPPORTED:
+            raise ValueError(
+                f"async engine supports stateless-client strategies only; "
+                f"use the synchronous simulator for {fed.strategy!r}")
+        super().__init__(fed, sim, x_train, y_train, x_test, y_test, parts)
+        self.hetero = hetero
+        self.system = ClientSystemModel(hetero, self.n_clients,
+                                        fed.local_steps)
+        self._deltas_fn = jax.jit(self._make_deltas_fn())
+        self._apply_fn = jax.jit(self._make_apply_fn())
+        self.version = 0              # number of server updates applied
+        self.vtime = 0.0              # virtual clock
+        self.event_log: List[tuple] = []   # (kind, time, client, version)
+        self.staleness_seen: List[int] = []
+
+    # ------------------------------------------------------------------
+    def _make_deltas_fn(self):
+        """(params, server_state, xb, yb, counts) -> stacked deltas, losses
+        for one dispatch group — the same vmapped client_update the
+        synchronous round uses, minus the aggregation."""
+        strategy = self.strategy
+        fed = self.fed
+        client_update = self._make_client_update()
+
+        def deltas_fn(params, server_state, xb, yb, counts, cstates):
+            ctx = strategy.client_setup(server_state, params, fed)
+            deltas, _, losses, _ = jax.vmap(
+                lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
+            )(xb, yb, counts, cstates)
+            return deltas, losses
+
+        return deltas_fn
+
+    def _make_apply_fn(self):
+        """(params, server_state, stacked deltas, n_examples, scales)
+        -> (params', server_state').  `scales` folds the per-delta staleness
+        discount and FedNova normalisation into one multiplier."""
+        strategy, fed = self.strategy, self.fed
+
+        def apply_fn(params, server_state, deltas, n_examples, scales):
+            scaled = jax.tree.map(
+                lambda d: d * scales.reshape((-1,) + (1,) * (d.ndim - 1)
+                                             ).astype(d.dtype), deltas)
+            weights = A.compute_weights(
+                fed.aggregator, scaled, n_examples=n_examples,
+                ref=server_state.get("m"), lam=fed.drag_lambda)
+            mean_delta = strategy.server_aggregate(scaled, weights, fed)
+            return strategy.server_update(server_state, params, mean_delta,
+                                          fed)
+
+        return apply_fn
+
+    # ------------------------------------------------------------------
+    def _sample_clients(self, n: int) -> np.ndarray:
+        sel = SELECTORS[self.sim.selector]
+
+        def draw():
+            if self.sim.selector == "random":
+                return sel(self.rng, self.n_clients, n)
+            return sel(self.rng, self.n_clients, n, self.counts)
+
+        picks = draw()
+        if self.hetero.enabled and self.hetero.availability < 1.0:
+            # best-effort: redraw until the whole wave is reachable
+            for _ in range(20):
+                if all(self.system.is_available(int(c)) for c in picks):
+                    break
+                picks = draw()
+        return picks
+
+    def _dispatch(self, heap: list, n: int, now: float):
+        """Sample n clients, run their local rounds against the *current*
+        parameters (the version they would be handed), and schedule their
+        arrival events.  Clients with equal H_i are batched into one vmapped
+        call — with a homogeneous fleet this is exactly the synchronous
+        round's client computation."""
+        if n <= 0:
+            return
+        picks = self._sample_clients(n)
+        by_h: Dict[int, List[int]] = {}
+        for c in picks:
+            by_h.setdefault(int(self.system.local_steps[int(c)]), []).append(
+                int(c))
+        for h, group in by_h.items():
+            xs, ys = zip(*[self._client_batches(c, local_steps=h)
+                           for c in group])
+            xb = jnp.asarray(np.stack(xs))
+            yb = jnp.asarray(np.stack(ys))
+            counts = jnp.asarray(self.counts[np.asarray(group)])
+            cstates = self._get_client_states(group)
+            deltas, losses = self._deltas_fn(self.params, self.server_state,
+                                             xb, yb, counts, cstates)
+            for j, c in enumerate(group):
+                rec = _InFlight(
+                    client=c, version=self.version,
+                    delta=jax.tree.map(lambda x: x[j], deltas),
+                    loss=float(losses[j]),
+                    n_examples=float(len(self.parts[c])),
+                    delta_scale=self.system.delta_scale(c),
+                    finish_time=now + self.system.round_time(c))
+                self._seq += 1
+                heapq.heappush(heap, (rec.finish_time, self._seq, rec))
+                self.event_log.append(("dispatch", now, c, self.version))
+
+    def _flush(self, buffer: List[_InFlight]):
+        """Apply one buffered-K server update from the collected deltas."""
+        fed = self.fed
+        stale = np.asarray([self.version - r.version for r in buffer])
+        self.staleness_seen.extend(int(s) for s in stale)
+        disc = staleness_discount(stale, fed.staleness_mode,
+                                  fed.staleness_factor)
+        scales = jnp.asarray(
+            disc * np.asarray([r.delta_scale for r in buffer]), jnp.float32)
+        n_ex = jnp.asarray([r.n_examples for r in buffer], jnp.float32)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[r.delta for r in buffer])
+        self.params, self.server_state = self._apply_fn(
+            self.params, self.server_state, stacked, n_ex, scales)
+        self.version += 1
+        return float(np.mean([r.loss for r in buffer]))
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None, log_fn: Callable = None):
+        """Run until `rounds` server updates have been applied.  History
+        entries carry the virtual time `t` of each update so wall-clock-to-
+        accuracy comparisons against the synchronous engines are direct."""
+        rounds = rounds or self.sim.rounds
+        fed = self.fed
+        K = fed.buffer_k or fed.clients_per_round
+        inflight = max(fed.clients_per_round, K)
+        heap: list = []
+        buffer: List[_InFlight] = []
+        self._seq = 0
+        self._dispatch(heap, inflight, self.vtime)
+        while self.version < rounds and heap:
+            ft, _, rec = heapq.heappop(heap)
+            self.vtime = max(self.vtime, ft)
+            if self.system.drops_out(rec.client):
+                self.event_log.append(("drop", self.vtime, rec.client,
+                                       self.version))
+                self._dispatch(heap, 1, self.vtime)
+                continue
+            self.event_log.append(("arrive", self.vtime, rec.client,
+                                   rec.version))
+            buffer.append(rec)
+            if len(buffer) >= K:
+                loss = self._flush(buffer)
+                buffer = []
+                self.event_log.append(("update", self.vtime, -1,
+                                       self.version))
+                done = self.version >= rounds
+                if not done:
+                    self._dispatch(heap, K, self.vtime)
+                if self.version % self.sim.eval_every == 0 or done:
+                    acc = self.evaluate()
+                    self.history.append({"round": self.version,
+                                         "t": self.vtime, "acc": acc,
+                                         "loss": loss})
+                    if log_fn:
+                        log_fn(self.history[-1])
+        return self.history

@@ -25,6 +25,7 @@ from repro.core import tree as T
 from repro.core.selection import SELECTORS
 from repro.core.strategies import get_strategy
 from repro.data.partition import class_counts
+from repro.federated import aggregation as A
 from repro.models.vision import VISION_MODELS
 
 
@@ -69,6 +70,14 @@ class FederatedSimulator:
             init = functools.partial(init, n_classes=sim.n_classes)
         self.apply, self.features = apply, features
         self.params = init(jax.random.PRNGKey(sim.seed))
+        if fed.aggregator != "uniform" and fed.strategy in ("scaffold",
+                                                            "feddyn"):
+            # their server corrections (control variates c / drift h) are
+            # derived as *uniform* means; weighting only the deltas would
+            # silently bias the variance-reduction invariants
+            raise ValueError(
+                f"aggregator={fed.aggregator!r} is not supported with "
+                f"{fed.strategy!r}; use aggregator='uniform'")
         self.strategy = get_strategy(fed.strategy)
         self.server_state = self.strategy.server_init(self.params)
         self.needs_teacher = fed.distill or fed.strategy in ("fedgkd", "fedntd")
@@ -130,7 +139,10 @@ class FederatedSimulator:
         return D.cross_entropy(logits, yb)
 
     # ------------------------------------------------------------------
-    def _make_round_fn(self):
+    def _make_client_update(self):
+        """The per-client local-training function, shared with the semi-async
+        engine (repro.federated.async_engine) so both produce bit-identical
+        deltas from the same inputs."""
         strategy, fed = self.strategy, self.fed
 
         def client_update(theta_t, ctx, xb, yb, counts, cstate):
@@ -169,12 +181,22 @@ class FederatedSimulator:
                 new_cstate = {"prev": theta_H}
             return delta, new_cstate, jnp.mean(losses), theta_H
 
-        def round_fn(params, server_state, xb, yb, counts, cstates):
+        return client_update
+
+    def _make_round_fn(self):
+        strategy, fed = self.strategy, self.fed
+        client_update = self._make_client_update()
+
+        def round_fn(params, server_state, xb, yb, counts, cstates,
+                     n_examples):
             ctx = strategy.client_setup(server_state, params, fed)
             deltas, ncs, losses, theta_Hs = jax.vmap(
                 lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
-            mean_delta = jax.tree.map(lambda d: jnp.mean(d, 0), deltas)
+            weights = A.compute_weights(
+                fed.aggregator, deltas, n_examples=n_examples,
+                ref=server_state.get("m"), lam=fed.drag_lambda)
+            mean_delta = strategy.server_aggregate(deltas, weights, fed)
             if fed.strategy == "feddyn":
                 mean_theta_H = jax.tree.map(lambda d: jnp.mean(d, 0), theta_Hs)
                 sum_drift = jax.tree.map(
@@ -201,13 +223,14 @@ class FederatedSimulator:
         return eval_fn
 
     # ------------------------------------------------------------------
-    def _client_batches(self, client: int):
+    def _client_batches(self, client: int, local_steps: Optional[int] = None):
         fed, sim = self.fed, self.sim
+        h = local_steps or fed.local_steps
         idx = self.parts[client]
-        need = fed.local_steps * sim.batch_size
+        need = h * sim.batch_size
         reps = int(np.ceil(need / len(idx)))
         pool = np.concatenate([self.rng.permutation(idx) for _ in range(reps)])
-        sel = pool[:need].reshape(fed.local_steps, sim.batch_size)
+        sel = pool[:need].reshape(h, sim.batch_size)
         return self.x_train[sel], self.y_train[sel]
 
     def evaluate(self) -> float:
@@ -233,8 +256,11 @@ class FederatedSimulator:
             yb = jnp.asarray(np.stack(ys))
             counts = jnp.asarray(self.counts[picks])
             cstates = self._get_client_states(picks)
+            n_examples = jnp.asarray([len(self.parts[int(c)]) for c in picks],
+                                     jnp.float32)
             self.params, self.server_state, ncs, loss = self._round_fn(
-                self.params, self.server_state, xb, yb, counts, cstates)
+                self.params, self.server_state, xb, yb, counts, cstates,
+                n_examples)
             if self.stateful:
                 self._put_client_states(picks, ncs)
             if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:

@@ -16,6 +16,7 @@ from repro.kernels import fedadc_update as _fu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import kd_loss as _kd
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import weighted_reduce as _wr
 
 LANE = _fu.LANE
 
@@ -77,6 +78,21 @@ def fedadc_server_update(theta, m, delta_bar, gamma, alpha_eta):
     m_new = jax.tree.map(lambda p: p[1], pairs,
                          is_leaf=lambda x: isinstance(x, tuple))
     return theta_new, m_new
+
+
+def weighted_delta_reduce(stacked, weights):
+    """Σ_k w_k·Δ_k over a stacked pytree (leading axis K on every leaf).
+    Weights are applied as given (normalise upstream for a weighted mean)."""
+    def leaf(d):
+        k = d.shape[0]
+        flat = d.reshape(k, -1)
+        pad = (-flat.shape[1]) % LANE
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        tiles = flat.reshape(k, -1, LANE)
+        out = _wr.weighted_reduce_2d(tiles, weights, interpret=_interpret())
+        return _from_tiles(out, pad, d.shape[1:], d.dtype)
+    return jax.tree.map(leaf, stacked)
 
 
 # ---------------------------------------------------------------------------

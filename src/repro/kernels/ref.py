@@ -26,6 +26,12 @@ def fedadc_server_update(theta, m, delta_bar, gamma, alpha_eta):
     return theta - alpha_eta * m_new, m_new
 
 
+def weighted_delta_reduce(deltas, weights):
+    """Σ_k w_k·Δ_k for a single stacked array (K, ...)."""
+    w = weights.astype(deltas.dtype)
+    return jnp.tensordot(w, deltas, axes=([0], [0]))
+
+
 # ---------------------------------------------------------------------------
 # flash attention (causal, GQA, optional sliding window)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,54 @@
+"""Fused weighted-delta-reduce kernel (the semi-async server hot spot).
+
+The server aggregate Δ̄ = Σ_k w_k·Δ_k reads K stacked parameter-sized deltas
+and writes one; unfused, XLA materialises the (K, n) broadcast product in HBM
+before reducing.  This kernel keeps the whole K-slab of each row-tile
+VMEM-resident and emits the reduced tile in a single pass — HBM traffic is
+exactly K+1 parameter-vectors per aggregate, the information-theoretic floor.
+
+Mirrors fedadc_update.py's tiling: operands arrive as flattened (rows, 128)
+lane-aligned tiles (padding handled by the ops.py wrapper), stacked to
+(K, rows, 128).  The row-block is shrunk as K grows so the K·block·128 slab
+stays comfortably inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 512          # upper bound; shrunk when K is large
+VMEM_BUDGET = 4 * 1024 * 1024   # slab budget per operand set (bytes)
+
+
+def _row_block(rows: int, k: int, itemsize: int) -> int:
+    """Largest multiple-of-8 row block whose (K+1)-slab fits the budget."""
+    per_row = (k + 1) * LANE * itemsize
+    block = min(BLOCK_ROWS, max(8, (VMEM_BUDGET // per_row) // 8 * 8))
+    return min(block, rows) if rows >= 8 else rows
+
+
+def _weighted_reduce_kernel(w_ref, d_ref, o_ref):
+    # w (K, LANE) — weight broadcast along lanes; d (K, block, LANE)
+    # o (block, LANE) = Σ_k w_k · d_k   — one VMEM pass, no HBM intermediate
+    o_ref[...] = jnp.sum(w_ref[...][:, None, :] * d_ref[...], axis=0)
+
+
+def weighted_reduce_2d(deltas, weights, interpret=False):
+    """deltas (K, rows, LANE), weights (K,) -> (rows, LANE) = Σ_k w_k·Δ_k."""
+    k, rows, _ = deltas.shape
+    w2d = jnp.broadcast_to(weights.astype(deltas.dtype)[:, None], (k, LANE))
+    block = _row_block(rows, k, deltas.dtype.itemsize)
+    grid = (pl.cdiv(rows, block),)
+    return pl.pallas_call(
+        _weighted_reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, LANE), lambda i: (0, 0)),
+                  pl.BlockSpec((k, block, LANE), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((block, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), deltas.dtype),
+        interpret=interpret,
+    )(w2d, deltas)

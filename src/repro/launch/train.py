@@ -28,6 +28,7 @@ from repro.configs.base import FedConfig, ModelConfig, RunConfig
 from repro.core import distillation as D
 from repro.core import tree as T
 from repro.core.strategies import get_strategy
+from repro.federated import aggregation as A
 from repro.models.registry import get_model
 
 POD_SUPPORTED = ("fedavg", "slowmo", "fedadc", "fedadc_double", "fedprox",
@@ -50,9 +51,13 @@ def state_shapes(mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
     return jax.eval_shape(lambda r: init_state(r, mcfg, fed, run), rng)
 
 
-def _token_histogram(tokens, vocab: int):
+def _token_histogram(tokens, vocab: int, valid=None):
+    """Client token statistics for the FedADC+ ρ vector; positions with
+    `valid` False (padding) are excluded."""
     flat = tokens.reshape(-1)
-    return jnp.zeros((vocab,), jnp.float32).at[flat].add(1.0)
+    w = jnp.ones_like(flat, jnp.float32) if valid is None \
+        else valid.reshape(-1).astype(jnp.float32)
+    return jnp.zeros((vocab,), jnp.float32).at[flat].add(w)
 
 
 def _local_objective(model, mcfg: ModelConfig, fed: FedConfig,
@@ -79,10 +84,10 @@ def _local_objective(model, mcfg: ModelConfig, fed: FedConfig,
         flat_s = s_l.reshape(-1, V)
         flat_t = t_l.reshape(-1, V)
         flat_y = jnp.clip(labels.reshape(-1), 0)
-        per_tok, _ = D.self_confidence_kd_loss(
-            flat_s, flat_t, flat_y, rho, fed.distill_lambda, fed.distill_tau)
-        # self_confidence_kd_loss returns batch mean; use masked variant:
-        return per_tok + 0.0 * aux_l
+        kd, _ = D.masked_self_confidence_kd_loss(
+            flat_s, flat_t, flat_y, rho, fed.distill_lambda, fed.distill_tau,
+            mask.reshape(-1))
+        return kd + 0.0 * aux_l
     return loss
 
 
@@ -93,6 +98,11 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         raise ValueError(
             f"pod engine supports stateless-client strategies {POD_SUPPORTED};"
             f" use the simulator for {fed.strategy} (per-client state).")
+    if fed.aggregator == "drag" and fed.strategy in ("fedavg", "fedprox"):
+        raise ValueError(
+            "drag aggregation in the pod engine needs a server-momentum "
+            "reference (slowmo/fedadc/fedadc_double); the client-serial "
+            "scan has no round mean to fall back on.")
     model = get_model(mcfg)
     strategy = get_strategy(fed.strategy)
     loss_fn = _local_objective(model, mcfg, fed, run)
@@ -101,7 +111,8 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         """cb: dict with leading (H, b) -> (delta, mean loss)."""
         rho = None
         if fed.distill:
-            hist = _token_histogram(cb["tokens"], mcfg.vocab_size)
+            hist = _token_histogram(cb["tokens"], mcfg.vocab_size,
+                                    valid=(cb["labels"] >= 0))
             rho = hist / jnp.maximum(hist.max(), 1.0)
 
         def local(carry, sb):
@@ -118,14 +129,22 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         (theta_H, _), ls = jax.lax.scan(local, (theta_t, extra0), cb)
         return T.sub(theta_t, theta_H), jnp.mean(ls)
 
-    def per_group(theta_t, ctx, cbs):
-        """cbs: dict with leading (CS, H, b) — serial clients, Δ-accumulate."""
-        def serial(acc, cb):
+    def per_group(theta_t, ctx, ref, cbs):
+        """cbs: dict with leading (CS, H, b) — serial clients, weighted
+        Δ-accumulation.  The aggregator weight for each client is computed in
+        streaming form (repro.federated.aggregation.streaming_weight) against
+        the server-momentum reference direction, so DRAG-style adaptive
+        weighting works without materialising the CS deltas."""
+        def serial(carry, cb):
+            acc, wsum = carry
             d, l = client_delta(theta_t, ctx, cb)
-            return T.add(acc, d), l
-        acc0 = T.zeros_like(theta_t)
-        acc, ls = jax.lax.scan(serial, acc0, cbs)
-        return acc, jnp.mean(ls)
+            w = A.streaming_weight(d, ref, fed.aggregator, fed.drag_lambda)
+            acc = jax.tree.map(lambda a, di: a + w.astype(di.dtype) * di,
+                               acc, d)
+            return (acc, wsum + w), l
+        acc0 = (T.zeros_like(theta_t), jnp.zeros(()))
+        (acc, wsum), ls = jax.lax.scan(serial, acc0, cbs)
+        return acc, wsum, jnp.mean(ls)
 
     compute_dtype = jnp.dtype(run.compute_dtype)
 
@@ -147,17 +166,25 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
                                     m=T.cast(server_ctx_state["m"],
                                              compute_dtype))
         ctx = strategy.client_setup(server_ctx_state, theta_t, fed)
+        ref = server_ctx_state.get("m") if fed.aggregator == "drag" else None
         CP = batch["tokens"].shape[0]
-        CS = batch["tokens"].shape[1]
         if CP == 1:
             squeezed = jax.tree.map(lambda x: x[0], batch)
-            acc, loss = per_group(theta_t, ctx, squeezed)
+            acc, wsum, loss = per_group(theta_t, ctx, ref, squeezed)
+            group_means = jax.tree.map(
+                lambda a: (a / wsum.astype(a.dtype))[None], acc)
+            gweights = wsum[None]
         else:
-            accs, losses = jax.vmap(
-                lambda cbs: per_group(theta_t, ctx, cbs))(batch)
-            acc = jax.tree.map(lambda a: jnp.sum(a, 0), accs)
+            accs, wsums, losses = jax.vmap(
+                lambda cbs: per_group(theta_t, ctx, ref, cbs))(batch)
+            group_means = jax.tree.map(
+                lambda a: a / wsums.reshape((-1,) + (1,) * (a.ndim - 1)
+                                            ).astype(a.dtype), accs)
+            gweights = wsums
             loss = jnp.mean(losses)
-        mean_delta = T.scale(acc, 1.0 / (CP * CS))
+        # per-pod weighted means recombine exactly through the shared hook:
+        # Δ̄ = Σ_p W_p·Δ̄_p / Σ_p W_p = Σ_i w_i·Δ_i / Σ_i w_i by linearity.
+        mean_delta = strategy.server_aggregate(group_means, gweights, fed)
         if mixed:
             mean_delta = T.cast(mean_delta, jnp.float32)
         new_params, new_server = strategy.server_update(

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import distillation as D
 
@@ -101,3 +101,31 @@ def test_property_targets_always_distribution(tau, lam, seed):
     np.testing.assert_allclose(tgt.sum(-1), 1.0, rtol=1e-4)
     # true-class mass ≥ teacher's damped leftover (sanity: finite + in [0,1+eps])
     assert bool(jnp.all(jnp.isfinite(tgt)))
+
+
+class TestMaskedSelfConfidenceKD:
+    def test_masked_equals_unmasked_on_all_valid(self):
+        s, t, y = logits_pair(11)
+        counts = jnp.arange(1.0, 11.0)
+        full, _ = D.self_confidence_kd_loss(s, t, y, counts, 0.4, 1.5)
+        masked, _ = D.masked_self_confidence_kd_loss(
+            s, t, y, counts, 0.4, 1.5, jnp.ones(s.shape[0], bool))
+        np.testing.assert_allclose(masked, full, rtol=1e-5)
+
+    def test_masked_drops_padded_positions(self):
+        """Loss over [valid | junk-with-mask-0] equals loss over valid only."""
+        s, t, y = logits_pair(12, B=16)
+        counts = jnp.ones(10)
+        mask = jnp.arange(16) < 10
+        junk_s = s.at[10:].set(100.0)   # wild logits at padded positions
+        want, _ = D.self_confidence_kd_loss(s[:10], t[:10], y[:10], counts,
+                                            0.3, 1.0)
+        got, _ = D.masked_self_confidence_kd_loss(junk_s, t, y, counts, 0.3,
+                                                  1.0, mask)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_all_masked_is_finite(self):
+        s, t, y = logits_pair(13)
+        loss, _ = D.masked_self_confidence_kd_loss(
+            s, t, y, jnp.ones(10), 0.5, 1.0, jnp.zeros(s.shape[0], bool))
+        assert bool(jnp.isfinite(loss)) and float(loss) == 0.0

@@ -1,0 +1,279 @@
+"""Heterogeneity subsystem: weighted-reduce kernel vs oracle, staleness
+math vs a hand-rolled numpy recursion, virtual-clock determinism, and the
+sync/semi-async parity guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, HeteroConfig
+from repro.core import tree as T
+from repro.core.strategies import get_strategy
+from repro.data.partition import sort_and_partition
+from repro.data.synthetic import make_image_dataset
+from repro.federated import aggregation as A
+from repro.federated.async_engine import AsyncFederatedSimulator
+from repro.federated.hetero import (ClientSystemModel, fednova_scale,
+                                    sample_speeds, staleness_discount)
+from repro.federated.simulator import FederatedSimulator, SimConfig
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, xt, yt = make_image_dataset(600, 150, 10, image_size=16, seed=0,
+                                      noise=0.5)
+    parts = sort_and_partition(y, 10, s=2, seed=0)
+    return x, y, xt, yt, parts
+
+
+def _fed(strategy="fedadc", **kw):
+    base = dict(local_steps=4, clients_per_round=3, n_clients=10, eta=0.03,
+                beta_global=0.6, beta_local=0.6)
+    base.update(kw)
+    return FedConfig(strategy=strategy, **base)
+
+
+def _sim(rounds=4, **kw):
+    base = dict(model="cnn", n_classes=10, batch_size=16, rounds=rounds,
+                eval_every=rounds, cnn_width=8, seed=1)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# weighted-delta-reduce kernel vs the pure-jnp oracle (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+class TestWeightedReduceKernel:
+    @pytest.mark.parametrize("k,n", [(2, 128), (4, 1000), (7, 131),
+                                     (3, 8192), (16, 64)])
+    def test_matches_ref(self, k, n):
+        kx, kw = jax.random.split(jax.random.PRNGKey(k * 1000 + n))
+        d = jax.random.normal(kx, (k, n))
+        w = jax.random.uniform(kw, (k,))
+        got = ops.weighted_delta_reduce({"leaf": d}, w)["leaf"]
+        np.testing.assert_allclose(got, ref.weighted_delta_reduce(d, w),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_pytree_and_shapes(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        tree = {"w": jax.random.normal(k1, (5, 4, 3)),
+                "b": jax.random.normal(k2, (5, 7))}
+        w = jnp.asarray([0.1, 0.2, 0.3, 0.25, 0.15])
+        out = ops.weighted_delta_reduce(tree, w)
+        assert out["w"].shape == (4, 3) and out["b"].shape == (7,)
+        np.testing.assert_allclose(
+            out["w"], jnp.tensordot(w, tree["w"], axes=([0], [0])),
+            rtol=1e-5, atol=1e-6)
+
+    def test_weighted_mean_normalises(self):
+        d = jnp.stack([jnp.full((8,), 2.0), jnp.full((8,), 6.0)])
+        out = A.weighted_mean({"x": d}, jnp.asarray([1.0, 3.0]))["x"]
+        np.testing.assert_allclose(out, 5.0, rtol=1e-6)   # (2+3·6)/4
+
+    def test_pallas_hook_matches_plain(self):
+        d = {"x": jax.random.normal(jax.random.PRNGKey(3), (4, 33))}
+        w = jnp.asarray([0.4, 0.1, 0.3, 0.2])
+        s = get_strategy("fedadc")
+        plain = s.server_aggregate(d, w, _fed(use_pallas=False))
+        fused = s.server_aggregate(d, w, _fed(use_pallas=True))
+        np.testing.assert_allclose(plain["x"], fused["x"], rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# aggregation weights
+# ---------------------------------------------------------------------------
+class TestAggregators:
+    def test_uniform_and_examples(self):
+        d = {"x": jnp.ones((3, 4))}
+        np.testing.assert_allclose(A.compute_weights("uniform", d),
+                                   np.ones(3))
+        np.testing.assert_allclose(
+            A.compute_weights("examples", d, n_examples=jnp.asarray(
+                [10.0, 30.0, 60.0])), [10, 30, 60])
+
+    def test_drag_downweights_divergent_delta(self):
+        aligned = jnp.ones((8,))
+        outlier = -jnp.ones((8,))
+        d = {"x": jnp.stack([aligned, aligned * 1.1, outlier])}
+        w = A.compute_weights("drag", d, ref={"x": aligned}, lam=4.0)
+        assert float(w[0]) > 0.9 * float(w[1])
+        assert float(w[2]) < 0.05 * float(w[0])
+
+    def test_drag_scale_invariant(self):
+        d = {"x": jnp.stack([jnp.ones(4), -jnp.ones(4)])}
+        w1 = A.compute_weights("drag", d, ref={"x": jnp.ones(4)})
+        w2 = A.compute_weights("drag", d, ref={"x": 100.0 * jnp.ones(4)})
+        np.testing.assert_allclose(w1, w2, rtol=1e-5)
+
+    def test_streaming_rejects_unknown_and_refless_drag(self):
+        d = {"x": jnp.ones(4)}
+        with pytest.raises(ValueError):
+            A.streaming_weight(d, None, "bogus", 1.0)
+        with pytest.raises(ValueError):
+            A.streaming_weight(d, None, "drag", 1.0)
+
+    def test_weighted_aggregation_rejected_for_stateful_strategies(self, data):
+        x, y, xt, yt, parts = data
+        with pytest.raises(ValueError):
+            FederatedSimulator(_fed("scaffold", aggregator="drag"), _sim(),
+                               x, y, xt, yt, parts)
+
+    def test_pod_engine_rejects_refless_drag(self):
+        from repro.configs import ARCHS
+        from repro.configs.base import RunConfig
+        from repro.launch.train import make_train_step
+        with pytest.raises(ValueError):
+            make_train_step(ARCHS["qwen3-4b"].reduced(),
+                            _fed("fedavg", aggregator="drag"), RunConfig())
+
+    def test_streaming_matches_stacked(self):
+        k = jax.random.PRNGKey(5)
+        deltas = jax.random.normal(k, (4, 16))
+        ref_dir = {"x": jnp.ones(16)}
+        stacked = A.compute_weights("drag", {"x": deltas}, ref=ref_dir,
+                                    lam=2.0)
+        streamed = [A.streaming_weight({"x": deltas[i]}, ref_dir, "drag", 2.0)
+                    for i in range(4)]
+        np.testing.assert_allclose(stacked, np.asarray(streamed), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hetero system model + staleness algebra
+# ---------------------------------------------------------------------------
+class TestHeteroModel:
+    def test_speed_distributions(self):
+        rng = np.random.RandomState(0)
+        h = HeteroConfig(enabled=True, speed_dist="bimodal",
+                         straggler_frac=0.5, straggler_slowdown=4.0)
+        s = sample_speeds(h, 1000, rng)
+        assert set(np.unique(s)) == {0.25, 1.0}
+        h2 = HeteroConfig(enabled=True, speed_dist="lognormal")
+        s2 = sample_speeds(h2, 100, rng)
+        assert s2.max() == 1.0 and s2.min() > 0
+
+    def test_round_time_scales_with_slowdown(self):
+        h = HeteroConfig(enabled=True, speed_dist="bimodal",
+                         straggler_frac=0.5, straggler_slowdown=4.0, seed=0)
+        m = ClientSystemModel(h, 100, base_local_steps=8)
+        fast = [m.round_time(c) for c in range(100) if m.speeds[c] == 1.0]
+        slow = [m.round_time(c) for c in range(100) if m.speeds[c] == 0.25]
+        np.testing.assert_allclose(np.mean(slow) / np.mean(fast), 4.0)
+
+    def test_fednova_scale(self):
+        assert fednova_scale(2, 8) == 4.0
+        assert fednova_scale(8, 8) == 1.0
+
+    def test_staleness_discount_vs_numpy(self):
+        s = np.arange(5)
+        np.testing.assert_allclose(staleness_discount(s, "none", 0.5),
+                                   np.ones(5))
+        np.testing.assert_allclose(staleness_discount(s, "poly", 0.5),
+                                   (1.0 + s) ** -0.5)
+        np.testing.assert_allclose(staleness_discount(s, "exp", 0.7),
+                                   0.7 ** s)
+
+    def test_staleness_corrected_momentum_recursion(self):
+        """Server-side FedADC recursion with per-delta staleness discounts
+        equals a hand-rolled numpy recursion:
+          m ← (β_g−β_l)·m + (Σ wn_i·c(s_i)·Δ_i)/η ;  θ ← θ − αη·m."""
+        fed = _fed("fedadc", staleness_mode="poly", staleness_factor=0.5)
+        s = get_strategy("fedadc")
+        rng = np.random.RandomState(0)
+        theta = {"w": jnp.asarray(rng.randn(6), jnp.float32)}
+        state = {"m": {"w": jnp.asarray(rng.randn(6), jnp.float32)}}
+        theta_np = np.asarray(theta["w"], np.float64)
+        m_np = np.asarray(state["m"]["w"], np.float64)
+        for step in range(3):
+            deltas = rng.randn(4, 6).astype(np.float32) * 0.01
+            stale = np.asarray([0, 1, 2, 0])
+            disc = staleness_discount(stale, "poly", 0.5)
+            scaled = {"w": jnp.asarray(deltas * disc[:, None])}
+            w = A.compute_weights("uniform", scaled)
+            mean_delta = s.server_aggregate(scaled, w, fed)
+            theta, state = s.server_update(state, theta, mean_delta, fed)
+            # numpy oracle
+            dbar = (deltas.astype(np.float64) * disc[:, None]).mean(0)
+            m_np = (fed.beta_global - fed.beta_local) * m_np + dbar / fed.eta
+            theta_np = theta_np - fed.alpha * fed.eta * m_np
+            np.testing.assert_allclose(state["m"]["w"], m_np, rtol=1e-4)
+            np.testing.assert_allclose(theta["w"], theta_np, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# virtual-clock engine
+# ---------------------------------------------------------------------------
+HETERO = HeteroConfig(enabled=True, speed_dist="bimodal", straggler_frac=0.3,
+                      straggler_slowdown=4.0, local_steps_choices=(2, 4, 8),
+                      drop_prob=0.05, seed=3)
+
+
+class TestAsyncEngine:
+    def test_scheduler_deterministic_under_fixed_seed(self, data):
+        x, y, xt, yt, parts = data
+        fed = _fed("fedadc", clients_per_round=4, buffer_k=2)
+        runs = []
+        for _ in range(2):
+            e = AsyncFederatedSimulator(fed, _sim(rounds=5), HETERO,
+                                        x, y, xt, yt, parts)
+            h = e.run()
+            runs.append((e.event_log, e.staleness_seen, h))
+        assert runs[0][0] == runs[1][0]      # identical event sequences
+        assert runs[0][1] == runs[1][1]
+        assert runs[0][2] == runs[1][2]
+
+    def test_semi_async_sees_staleness(self, data):
+        x, y, xt, yt, parts = data
+        fed = _fed("fedadc", clients_per_round=4, buffer_k=2)
+        e = AsyncFederatedSimulator(fed, _sim(rounds=5), HETERO,
+                                    x, y, xt, yt, parts)
+        h = e.run()
+        assert max(e.staleness_seen) >= 1    # stale deltas actually occurred
+        assert np.isfinite(h[-1]["loss"])
+
+    def test_sync_barrier_mode_has_zero_staleness(self, data):
+        x, y, xt, yt, parts = data
+        fed = _fed("fedadc", clients_per_round=3)     # buffer_k == K
+        e = AsyncFederatedSimulator(fed, _sim(rounds=3), HETERO,
+                                    x, y, xt, yt, parts)
+        e.run()
+        assert max(e.staleness_seen) == 0
+
+    def test_stateful_strategies_rejected(self, data):
+        x, y, xt, yt, parts = data
+        with pytest.raises(ValueError):
+            AsyncFederatedSimulator(_fed("scaffold"), _sim(), HeteroConfig(),
+                                    x, y, xt, yt, parts)
+
+    @pytest.mark.parametrize("strategy", ["fedavg", "fedadc"])
+    def test_parity_with_synchronous_simulator(self, data, strategy):
+        """Acceptance: hetero off ⇒ the async engine reproduces the
+        synchronous round trajectory to numerical tolerance."""
+        x, y, xt, yt, parts = data
+        fed = _fed(strategy)
+        sync = FederatedSimulator(fed, _sim(rounds=4), x, y, xt, yt, parts)
+        h_sync = sync.run()
+        asyn = AsyncFederatedSimulator(fed, _sim(rounds=4), HeteroConfig(),
+                                       x, y, xt, yt, parts)
+        h_async = asyn.run()
+        assert max(asyn.staleness_seen) == 0
+        for hs, ha in zip(h_sync, h_async):
+            assert hs["round"] == ha["round"]
+            np.testing.assert_allclose(hs["loss"], ha["loss"], rtol=2e-4)
+            np.testing.assert_allclose(hs["acc"], ha["acc"], atol=1e-8)
+        for a, b in zip(jax.tree.leaves(sync.params),
+                        jax.tree.leaves(asyn.params)):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=1e-6)
+
+    def test_variable_local_work_fednova_runs(self, data):
+        x, y, xt, yt, parts = data
+        hetero = HeteroConfig(enabled=True, local_steps_choices=(2, 8),
+                              fednova=True, seed=1)
+        fed = _fed("fedadc", clients_per_round=3)
+        e = AsyncFederatedSimulator(fed, _sim(rounds=3), hetero,
+                                    x, y, xt, yt, parts)
+        h = e.run()
+        assert np.isfinite(h[-1]["loss"])
+        scales = {e.system.delta_scale(c) for c in range(e.n_clients)}
+        assert len(scales) > 1               # normalisation actually varies

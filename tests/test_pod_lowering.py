@@ -66,6 +66,42 @@ def test_serve_step_lowers_on_host_mesh(arch):
         assert compiled is not None
 
 
+def test_kd_loss_ignores_padding_tokens():
+    """FedADC+ KD regression: positions with label == -100 must contribute to
+    neither the CE/KD terms nor the ρ token statistics — junk content at
+    padded tail positions cannot change the round."""
+    import numpy as np
+    mcfg = ARCHS["qwen3-4b"].reduced()
+    fed = FedConfig(strategy="fedadc", clients_per_round=1, local_steps=2,
+                    eta=0.05, distill=True, distill_lambda=0.35)
+    run = RunConfig(remat="none", param_dtype="float32",
+                    compute_dtype="float32")
+    mesh = make_host_mesh()
+    with mesh:
+        from repro.launch.train import init_state
+        state = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+        step = make_train_step(mcfg, fed, run)
+        rng = np.random.RandomState(0)
+        b, L, pad_from = 2, 32, 20
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 1, 2, b, L))
+        labels = toks.copy()
+        labels[..., pad_from:] = -100
+        batch_a = {"tokens": jnp.asarray(toks, jnp.int32),
+                   "labels": jnp.asarray(labels, jnp.int32)}
+        junk = toks.copy()
+        junk[..., pad_from:] = rng.randint(0, mcfg.vocab_size,
+                                           size=junk[..., pad_from:].shape)
+        batch_b = {"tokens": jnp.asarray(junk, jnp.int32),
+                   "labels": jnp.asarray(labels, jnp.int32)}
+        sa, ma = step(state, batch_a)
+        sb, mb = step(state, batch_b)
+        assert jnp.allclose(ma["loss"], mb["loss"], rtol=1e-6)
+        for x, y in zip(jax.tree.leaves(sa["params"]),
+                        jax.tree.leaves(sb["params"])):
+            assert jnp.allclose(x, y, rtol=1e-5, atol=1e-7), \
+                "padding tokens leaked into the KD round"
+
+
 def test_round_decomposition_exact():
     from repro.launch.inputs import round_decomposition
     mesh = make_host_mesh()

@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                        dry-run artifacts
   straggler_bench    — wall-clock-to-accuracy, sync vs semi-async FedADC
                        under a 4× straggler fleet (DESIGN.md §Heterogeneity)
+  serving_bench      — continuous batching vs serial decode: offered-load
+                       sweep, tokens/sec + p50/p95 latency
+                       (DESIGN.md §Serving; emits BENCH_serving.json)
 """
 import argparse
 import time
@@ -27,7 +30,8 @@ def main() -> None:
     from benchmarks import (ablation_beta, clustering, comm_load,
                             fig1_acceleration, fig2_robustness, fig5_scale,
                             fig7_personalization, kernels_bench, lm_round,
-                            roofline_report, straggler_bench, table1_sota)
+                            roofline_report, serving_bench, straggler_bench,
+                            table1_sota)
     mods = {
         "kernels_bench": kernels_bench,
         "comm_load": comm_load,
@@ -41,6 +45,7 @@ def main() -> None:
         "lm_round": lm_round,
         "ablation_beta": ablation_beta,
         "straggler_bench": straggler_bench,
+        "serving_bench": serving_bench,
     }
     picked = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")

@@ -3,7 +3,12 @@ batch of prompts, then decode with the single-token serve_step against the
 KV/state cache — the same program the decode_32k / long_500k dry-runs lower
 for the production mesh.
 
+``--engine`` instead routes the requests through the continuous-batching
+``ServingEngine`` (chunked prefill interleaved with batched decode,
+per-request sampling — DESIGN.md §Serving).
+
 Run:  PYTHONPATH=src python examples/serve_demo.py [--arch zamba2-1.2b]
+                                                   [--engine]
 """
 import argparse
 import time
@@ -16,13 +21,41 @@ from repro.configs import get_arch
 from repro.models.registry import get_model
 
 
+def run_engine(cfg, args):
+    from repro.serving import SamplingParams, SchedulerConfig, ServingEngine
+    eng = ServingEngine(cfg, sched=SchedulerConfig(
+        n_slots=args.batch, max_len=args.prompt_len + args.gen,
+        prefill_chunk=16))
+    rng = np.random.RandomState(0)
+    t0 = time.time()
+    for i in range(2 * args.batch):          # oversubscribe the slots
+        prompt = rng.randint(0, cfg.vocab_size, args.prompt_len).tolist()
+        eng.add_request(prompt, max_new_tokens=args.gen,
+                        sampling=SamplingParams(temperature=0.8, top_k=40,
+                                                seed=i))
+    outs = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(o.tokens) for o in outs)
+    lats = sorted(o.latency for o in outs)
+    print(f"{args.arch}-reduced engine: {len(outs)} requests over "
+          f"{args.batch} slots, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s, p50 latency {lats[len(lats)//2]:.2f}s); "
+          f"sample row: {outs[0].tokens[:16]}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="zamba2-1.2b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching ServingEngine path")
     args = ap.parse_args()
+
+    if args.engine:
+        run_engine(get_arch(args.arch).reduced(), args)
+        return
 
     cfg = get_arch(args.arch).reduced()
     model = get_model(cfg)

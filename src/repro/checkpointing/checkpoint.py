@@ -23,10 +23,14 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
         arr = np.asarray(leaf)
-        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
-            # ml_dtypes (bf16, fp8) don't round-trip through npz: store the
-            # raw bits; restore views them back using the target's dtype.
-            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        view = {1: np.uint8, 2: np.uint16, 4: np.uint32,
+                8: np.uint64}.get(arr.dtype.itemsize)
+        if arr.dtype.isbuiltin != 1 and view is not None:
+            # ml_dtypes (bf16, fp8, ...) don't round-trip through npz —
+            # some versions expose them as kind "V", newer ones as kind
+            # "f", and either way np.load chokes on the descriptor.  Store
+            # the raw bits; restore views them back as the target dtype.
+            arr = arr.view(view)
         flat[key] = arr
     return flat
 
@@ -36,7 +40,14 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
     os.close(fd)
-    np.savez(tmp, **_flatten(tree))
+    try:
+        np.savez(tmp, **_flatten(tree))
+    except BaseException:
+        # a crashed save must not strand a partial tmp file next to the
+        # real checkpoints
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
     os.replace(tmp, path)
     return path
 

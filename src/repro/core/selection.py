@@ -30,24 +30,33 @@ def class_coverage_selection(rng: np.random.RandomState, n_clients: int,
             return pick
         if cov > best_cov:
             best, best_cov = pick, cov
-    # greedy repair: swap in clients that add missing classes
+    # greedy repair: hill-climb on single swaps, recomputing coverage from
+    # the CANDIDATE pick each iteration (a swap may drop the removed
+    # member's classes, so stale `missing` bookkeeping over-claims).  Only
+    # strictly-improving swaps are applied, so the loop terminates with a
+    # pick that is single-swap locally optimal.
     pick = list(best)
-    missing = set(np.where(counts[pick].sum(0) == 0)[0])
-    outside = [c for c in range(n_clients) if c not in pick]
+    outside = [c for c in range(n_clients) if c not in set(pick)]
     rng.shuffle(outside)
-    for cand in outside:
-        if not missing:
+    improved = True
+    while improved:
+        cur_cov = int((counts[pick].sum(0) > 0).sum())
+        if cur_cov == n_classes:
             break
-        gain = missing & set(np.where(counts[cand] > 0)[0])
-        if gain:
-            # replace the member whose removal loses no class
-            for j, m in enumerate(pick):
+        improved = False
+        for ci, cand in enumerate(outside):
+            best_j, best_c = None, cur_cov
+            for j in range(len(pick)):
                 rest = pick[:j] + pick[j + 1:] + [cand]
-                if (counts[rest].sum(0) > 0).sum() >= best_cov:
-                    pick = rest
-                    missing -= gain
-                    break
-    return np.array(pick[:n_pick])
+                cov = int((counts[rest].sum(0) > 0).sum())
+                if cov > best_c:
+                    best_j, best_c = j, cov
+            if best_j is not None:
+                outside[ci] = pick[best_j]
+                pick = pick[:best_j] + pick[best_j + 1:] + [cand]
+                improved = True
+                break
+    return np.array(pick)
 
 
 SELECTORS = {"random": random_selection,

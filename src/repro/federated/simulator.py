@@ -98,8 +98,12 @@ class FederatedSimulator:
         return {"_": jnp.zeros(())}
 
     def _get_client_states(self, picks):
-        states = [self.client_states.get(int(c)) or self._client_state_init()
-                  for c in picks]
+        # `is None`, not truthiness: a stored state whose pytree happens to
+        # be falsy (e.g. a zero scalar) must not be silently re-initialised
+        states = []
+        for c in picks:
+            s = self.client_states.get(int(c))
+            states.append(self._client_state_init() if s is None else s)
         return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
     def _put_client_states(self, picks, stacked):
@@ -225,10 +229,10 @@ class FederatedSimulator:
     # ------------------------------------------------------------------
     def _client_batches(self, client: int, local_steps: Optional[int] = None):
         fed, sim = self.fed, self.sim
-        h = local_steps or fed.local_steps
+        h = fed.local_steps if local_steps is None else local_steps
         idx = self.parts[client]
         need = h * sim.batch_size
-        reps = int(np.ceil(need / len(idx)))
+        reps = max(int(np.ceil(need / len(idx))), 1)
         pool = np.concatenate([self.rng.permutation(idx) for _ in range(reps)])
         sel = pool[:need].reshape(h, sim.batch_size)
         return self.x_train[sel], self.y_train[sel]
@@ -243,7 +247,7 @@ class FederatedSimulator:
         return correct / n
 
     def run(self, rounds: Optional[int] = None, log_fn: Callable = None):
-        rounds = rounds or self.sim.rounds
+        rounds = self.sim.rounds if rounds is None else rounds
         sel = SELECTORS[self.sim.selector]
         for t in range(rounds):
             if self.sim.selector == "random":

@@ -100,14 +100,14 @@ def lower_one(arch_id: str, shape_name: str, multi_pod: bool,
                 mcfg = _rep(mcfg, moe_dispatch_axis="data")
             state_sds = I.state_inputs(mcfg, _fed_for(shape, arch_id),
                                        run, mesh, mode=mode)
-            cache_sds, tokens, cur_pos = I.decode_inputs(mcfg, shape, mesh,
-                                                         multi_pod)
+            cache_sds, tokens, cur_pos, active = I.decode_inputs(
+                mcfg, shape, mesh, multi_pod)
             step = make_serve_step(mcfg)
             cache_sh = jax.tree.map(lambda s: s.sharding, cache_sds)
             jitted = jax.jit(step, out_shardings=(None, cache_sh),
                              donate_argnums=(1,) if donate else ())
             lowered = jitted.lower(state_sds["params"], cache_sds, tokens,
-                                   cur_pos)
+                                   cur_pos, active)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower

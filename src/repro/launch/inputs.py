@@ -94,7 +94,12 @@ def prefill_inputs(mcfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
 def decode_inputs(mcfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                   multi_pod: bool, cache_dtype=jnp.bfloat16):
-    """-> (cache_sds_with_shardings, tokens_sds, cur_pos_sds)."""
+    """-> (cache_sds_with_shardings, tokens_sds, cur_pos_sds, active_sds).
+
+    Decoder-only archs lower the continuous-batching inner step: per-slot
+    positions (B,) plus an (B,) active mask — exactly what the serving
+    scheduler drives.  Enc-dec keeps the batch-synchronous scalar cur_pos
+    (active is None)."""
     from repro.launch.serve import cache_shapes
     B, L = shape.global_batch, shape.seq_len
     cache = cache_shapes(mcfg, B, L, cache_dtype)
@@ -104,9 +109,14 @@ def decode_inputs(mcfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         cache, shardings)
     bspec = S.serve_batch_spec(mesh, B, multi_pod)
     tokens = _sds((B, 1), jnp.int32, mesh, bspec)
-    cur_pos = jax.ShapeDtypeStruct((), jnp.int32,
-                                   sharding=NamedSharding(mesh, P()))
-    return cache_sds, tokens, cur_pos
+    if mcfg.is_encoder_decoder:
+        cur_pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                       sharding=NamedSharding(mesh, P()))
+        active = None
+    else:
+        cur_pos = _sds((B,), jnp.int32, mesh, P(bspec[0]))
+        active = _sds((B,), jnp.bool_, mesh, P(bspec[0]))
+    return cache_sds, tokens, cur_pos, active
 
 
 def state_inputs(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,

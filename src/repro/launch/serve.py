@@ -1,9 +1,19 @@
 """Serving steps for the inference shapes.
 
-* ``prefill_step`` — full-sequence forward (logits); lowered for the
-  prefill_32k shape.
-* ``serve_step``   — ONE new token against a KV/state cache of seq_len;
-  lowered for decode_32k / long_500k.  Greedy sampling.
+These are the jit'd inner steps the continuous-batching scheduler
+(``repro.serving``) drives:
+
+* ``prefill_step``       — full-sequence forward (argmax of last logits);
+  lowered for the prefill_32k shape.
+* ``serve_step``         — ONE new token per slot against a KV/state cache:
+  per-slot positions (B,) and an ``active`` mask so slots at different
+  depths (or empty slots) batch into a single call; lowered for
+  decode_32k / long_500k.  Returns raw logits — sampling is the
+  scheduler's job (per-request greedy / temperature / top-k).
+* ``prefill_chunk_step`` — ingest a chunk of prompt tokens for ONE slot
+  (batch=1 cache slice) in a single jit call, via a scan of decode steps;
+  the scheduler interleaves these chunks with batched decode so a long
+  prompt never stalls in-flight generation.
 """
 from __future__ import annotations
 
@@ -12,7 +22,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.registry import get_model
-from repro.models import encdec
 
 
 def make_prefill_step(mcfg: ModelConfig, use_pallas: bool = False):
@@ -26,13 +35,40 @@ def make_prefill_step(mcfg: ModelConfig, use_pallas: bool = False):
 
 
 def make_serve_step(mcfg: ModelConfig):
+    """-> serve_step(params, cache, tokens (B,1), cur_pos (B,) | scalar,
+    active (B,) bool | None) -> (logits (B,V), cache)."""
     model = get_model(mcfg)
 
-    def serve_step(params, cache, tokens, cur_pos):
-        logits, cache = model.decode_step(params, cache, tokens, cur_pos, mcfg)
-        next_tok = logits.argmax(-1).astype(jnp.int32)
-        return next_tok[:, None], cache
+    def serve_step(params, cache, tokens, cur_pos, active=None):
+        return model.decode_step(params, cache, tokens, cur_pos, mcfg,
+                                 active=active)
     return serve_step
+
+
+def make_prefill_chunk_step(mcfg: ModelConfig, chunk: int):
+    """-> chunk_step(params, slot_cache (batch=1), tokens (1, chunk),
+    pos0 scalar, n_valid scalar) -> (last_logits (1,V), slot_cache).
+
+    Scans ``chunk`` decode steps over one slot's cache slice; positions
+    run pos0..pos0+chunk-1.  Steps at/after ``n_valid`` are padding: their
+    cache writes are masked out and ``last_logits`` holds the logits of
+    the final *valid* token, so a partial last chunk is bit-exact."""
+    model = get_model(mcfg)
+
+    def chunk_step(params, slot_cache, tokens, pos0, n_valid):
+        def body(carry, i):
+            cache, last = carry
+            valid = i < n_valid
+            logits, cache = model.decode_step(
+                params, cache, jax.lax.dynamic_slice_in_dim(tokens, i, 1, 1),
+                pos0 + i, mcfg, active=valid[None])
+            last = jnp.where(valid, logits.astype(jnp.float32), last)
+            return (cache, last), None
+        last0 = jnp.zeros((1, mcfg.vocab_size), jnp.float32)
+        (slot_cache, last), _ = jax.lax.scan(
+            body, (slot_cache, last0), jnp.arange(chunk))
+        return last, slot_cache
+    return chunk_step
 
 
 def cache_shapes(mcfg: ModelConfig, batch: int, max_len: int,

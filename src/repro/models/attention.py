@@ -6,8 +6,10 @@
   cache and weight-absorbed decode — the TPU-friendly formulation (two
   matmuls against the latent cache instead of materialising per-head K/V).
 
-Each variant exposes ``init``, ``forward`` (full sequence, causal) and
-``decode`` (single token against a cache).  Caches are dicts of arrays so
+Each variant exposes ``init`` and ``forward`` (full sequence, causal);
+single-token decode against a cache lives in ``mla_decode`` here and, for
+GQA, inline in ``transformer._block_decode`` (which owns the window /
+cache-size coupling for stacked runs).  Caches are dicts of arrays so
 they shard like any other pytree.
 """
 from __future__ import annotations
@@ -139,61 +141,9 @@ def gqa_forward(p, x, cfg, layer_idx: int, use_pallas: bool = False):
     return L.linear(p["wo"], out.reshape(B, Lq, -1))
 
 
-def gqa_init_cache(cfg, layer_idx: int, batch: int, max_len: int, dtype):
-    hd = cfg.resolved_head_dim
-    if cfg.layer_uses_window(layer_idx):
-        max_len = min(max_len, cfg.sliding_window)
-    return {
-        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
-        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dtype),
-        "kpos": jnp.full((max_len,), -1, jnp.int32),
-    }
-
-
-def gqa_decode(p, x, cache, cfg, layer_idx: int, cur_pos):
-    """x (B,1,d); cur_pos scalar int32 = index of this token. Ring-buffer
-    write for windowed layers, plain write otherwise (buffer sized to fit)."""
-    B = x.shape[0]
-    positions = jnp.full((B, 1), cur_pos, jnp.int32)
-    q, k, v = _gqa_qkv(p, x, cfg, positions)
-    S = cache["k"].shape[1]
-    slot = jnp.mod(cur_pos, S)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    kpos = jax.lax.dynamic_update_slice(cache["kpos"],
-                                        cur_pos[None].astype(jnp.int32), (slot,))
-    window = cfg.sliding_window if cfg.layer_uses_window(layer_idx) else 0
-    valid = (kpos >= 0) & (kpos <= cur_pos)
-    if window > 0:
-        valid &= kpos > cur_pos - window
-    mask = valid[None, None, None, :]
-    out = _sdpa(q, ck, cv, mask)
-    y = L.linear(p["wo"], out.reshape(B, 1, -1))
-    return y, {"k": ck, "v": cv, "kpos": kpos}
-
-
-def gqa_prefill(p, x, cfg, layer_idx: int, max_len: int):
-    """Full-sequence forward that also materialises the decode cache."""
-    B, Lq, _ = x.shape
-    positions = jnp.arange(Lq)[None, :]
-    q, k, v = _gqa_qkv(p, x, cfg, positions)
-    window = cfg.sliding_window if cfg.layer_uses_window(layer_idx) else 0
-    mask = causal_window_mask(Lq, Lq, window)
-    out = _sdpa(q, k, v, mask)
-    y = L.linear(p["wo"], out.reshape(B, Lq, -1))
-    S = min(max_len, window) if window > 0 else max_len
-    ck = k[:, -S:].astype(x.dtype)
-    cv = v[:, -S:].astype(x.dtype)
-    kpos = jnp.arange(Lq)[-S:].astype(jnp.int32)
-    pad = S - ck.shape[1]
-    if pad > 0:
-        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
-    return y, {"k": ck, "v": cv, "kpos": kpos}
-
+# The GQA single-token decode path (per-slot ring-buffer write + kpos
+# mask) lives inline in ``transformer._block_decode``, which owns the
+# window/cache-size coupling for stacked runs.
 
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3)
@@ -263,27 +213,26 @@ def mla_init_cache(cfg, batch: int, max_len: int, dtype):
     return {
         "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
-        "kpos": jnp.full((max_len,), -1, jnp.int32),
+        "kpos": jnp.full((batch, max_len), -1, jnp.int32),
     }
 
 
 def mla_decode(p, x, cache, cfg, cur_pos):
     """Weight-absorbed decode: scores and values are matmuls against the
-    compressed latent cache — per-head K/V never materialise."""
+    compressed latent cache — per-head K/V never materialise.  cur_pos is
+    (B,): each slot writes/masks its own position."""
     m = cfg.mla
     B = x.shape[0]
-    positions = jnp.full((B, 1), cur_pos, jnp.int32)
+    positions = cur_pos[:, None]
     q_nope, q_rope = _mla_q(p, x, cfg, positions)           # (B,1,H,*)
     c_kv, k_rope = _mla_latent(p, x, cfg, positions)        # (B,1,r),(B,1,dr)
     slot = jnp.mod(cur_pos, cache["c_kv"].shape[1])
-    cc = jax.lax.dynamic_update_slice(cache["c_kv"],
-                                      c_kv.astype(cache["c_kv"].dtype),
-                                      (0, slot, 0))
-    cr = jax.lax.dynamic_update_slice(cache["k_rope"],
-                                      k_rope.astype(cache["k_rope"].dtype),
-                                      (0, slot, 0))
-    kpos = jax.lax.dynamic_update_slice(cache["kpos"],
-                                        cur_pos[None].astype(jnp.int32), (slot,))
+    rows = jnp.arange(B)
+    cc = cache["c_kv"].at[rows, slot].set(
+        c_kv[:, 0].astype(cache["c_kv"].dtype))
+    cr = cache["k_rope"].at[rows, slot].set(
+        k_rope[:, 0].astype(cache["k_rope"].dtype))
+    kpos = cache["kpos"].at[rows, slot].set(cur_pos)
     # absorb W_uk into q:  q_abs (B,1,H,r)
     wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.qk_nope_head_dim)
     q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -293,8 +242,8 @@ def mla_decode(p, x, cache, cfg, cur_pos):
     s2 = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
                     cr.astype(jnp.float32))
     scores = (s1 + s2) * scale
-    valid = (kpos >= 0) & (kpos <= cur_pos)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid = (kpos >= 0) & (kpos <= cur_pos[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bhqk,bkr->bqhr", w, cc.astype(jnp.float32))
     wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)

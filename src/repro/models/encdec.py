@@ -154,7 +154,17 @@ def prefill_cross(params, enc_out, cfg, cache):
                 xv=xv.astype(cache["xv"].dtype))
 
 
-def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig):
+def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig,
+                active=None):
+    """cur_pos stays scalar here (all sequences at the same depth): the
+    decoder's kpos is shared across the batch, so whisper serves via the
+    batch-synchronous path, not the continuous-batching engine.  For the
+    same reason a per-slot ``active`` mask cannot be honoured consistently
+    (kpos would advance for masked rows) and is rejected."""
+    if active is not None:
+        raise NotImplementedError(
+            "enc-dec decode has a batch-shared kpos; per-slot active "
+            "masking is unsupported — serve whisper batch-synchronously")
     B = tokens.shape[0]
     hd = cfg.resolved_head_dim
     x = L.embed(params["embed"], tokens)

@@ -214,6 +214,9 @@ def loss_fn(params, batch, cfg: ModelConfig, use_pallas: bool = False,
 # Decode (serve_step): one token against a cache.
 # ---------------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-slot caches: every sequence in the batch carries its own write
+    position (``kpos`` is (batch, S)), so the serving engine can decode
+    requests at different depths in one batched step."""
     runs = partition_runs(cfg)
     cache: Dict = {}
     for ri, (kind, win, idxs) in enumerate(runs):
@@ -227,7 +230,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
                                     cfg.resolved_head_dim), dtype),
                     "v": jnp.zeros((batch, S, cfg.n_kv_heads,
                                     cfg.resolved_head_dim), dtype),
-                    "kpos": jnp.full((S,), -1, jnp.int32)}
+                    "kpos": jnp.full((batch, S), -1, jnp.int32)}
         elif kind == MAMBA2:
             one = lambda: M2.mamba2_init_cache(cfg, batch, dtype)
         elif kind == MLSTM:
@@ -248,20 +251,19 @@ def _block_decode(kind, p, x, c, cfg, cur_pos):
         if cfg.mla is not None:
             y, c = A.mla_decode(p["attn"], h, c, cfg, cur_pos)
         else:
-            # window handled via cache size (ring buffer) + kpos mask
+            # window handled via cache size (ring buffer) + kpos mask;
+            # cur_pos is (B,) so every slot writes its own ring position
             B = x.shape[0]
-            positions = jnp.full((B, 1), cur_pos, jnp.int32)
+            positions = cur_pos[:, None]
             q, k, v = A._gqa_qkv(p["attn"], h, cfg, positions)
             S = c["k"].shape[1]
             slot = jnp.mod(cur_pos, S)
-            ck = jax.lax.dynamic_update_slice(c["k"], k.astype(c["k"].dtype),
-                                              (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(c["v"], v.astype(c["v"].dtype),
-                                              (0, slot, 0, 0))
-            kpos = jax.lax.dynamic_update_slice(
-                c["kpos"], cur_pos[None].astype(jnp.int32), (slot,))
-            valid = (kpos >= 0) & (kpos <= cur_pos)
-            out = A._sdpa(q, ck, cv, valid[None, None, None, :])
+            rows = jnp.arange(B)
+            ck = c["k"].at[rows, slot].set(k[:, 0].astype(c["k"].dtype))
+            cv = c["v"].at[rows, slot].set(v[:, 0].astype(c["v"].dtype))
+            kpos = c["kpos"].at[rows, slot].set(cur_pos)
+            valid = (kpos >= 0) & (kpos <= cur_pos[:, None])
+            out = A._sdpa(q, ck, cv, valid[:, None, None, :])
             y = L.linear(p["attn"]["wo"], out.reshape(B, 1, -1))
             c = {"k": ck, "v": cv, "kpos": kpos}
         x = x + y
@@ -286,8 +288,17 @@ def _block_decode(kind, p, x, c, cfg, cur_pos):
     raise ValueError(kind)
 
 
-def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig):
-    """tokens (B,1) int32; cur_pos scalar int32 -> (logits (B,V), cache)."""
+def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig,
+                active=None):
+    """tokens (B,1) int32; cur_pos scalar or (B,) int32 -> (logits (B,V),
+    cache).  A scalar cur_pos broadcasts (all sequences at the same depth);
+    a (B,) vector decodes per-slot positions — the continuous-batching
+    serving path.  ``active`` (B,) bool, when given, masks the cache write
+    per slot: inactive slots keep their prior cache bit-exactly, so a slot
+    mid-prefill is not corrupted by interleaved batched decode steps."""
+    B = tokens.shape[0]
+    cur_pos = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32).reshape(-1),
+                               (B,))
     x = L.embed(params["embed"], tokens)
     runs = partition_runs(cfg)
     new_cache: Dict = {}
@@ -309,6 +320,12 @@ def decode_step(params, cache, tokens, cur_pos, cfg: ModelConfig):
         else:
             x, nc = jax.lax.scan(body, x, (p, c))
         new_cache[str(ri)] = nc
+    if active is not None:
+        # every cache leaf is (n_layers, B, ...): mask axis 1
+        new_cache = jax.tree.map(
+            lambda new, old: jnp.where(
+                active.reshape((1, B) + (1,) * (new.ndim - 2)), new, old),
+            new_cache, cache)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = _unembed(params, x, cfg)
     return logits[:, 0], new_cache

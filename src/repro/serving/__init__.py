@@ -1,0 +1,11 @@
+"""Continuous-batching serving engine (DESIGN.md §Serving)."""
+from repro.serving.cache import CacheManager
+from repro.serving.engine import ServingEngine
+from repro.serving.request import (Request, RequestOutput, RequestQueue,
+                                   SamplingParams)
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+__all__ = ["CacheManager", "ServingEngine", "Request", "RequestOutput",
+           "RequestQueue", "SamplingParams", "sample_tokens", "Scheduler",
+           "SchedulerConfig"]

@@ -1,0 +1,117 @@
+"""Slot/page cache manager for the continuous-batching engine.
+
+Physical layout is ONE batched cache pytree (``model.init_cache(cfg,
+n_slots, max_len)``) — every leaf is (n_layers, n_slots, ...), so the
+batched decode step runs over all slots in a single jit call.  On top of
+that sit two accounting layers:
+
+* **KV pages** — attention/MLA layers consume ``ceil(len / page_size)``
+  pages per slot from a global pool.  Admission reserves the worst case
+  (prompt + max_new tokens) up front, so an admitted request can never run
+  out of cache mid-flight and no eviction path is needed.
+* **SSM state slots** — recurrent leaves (mamba2 ``h``/``conv``, xLSTM
+  ``C``/``n``/``m``/``c``/``h``) are fixed-size and length-independent:
+  one state page per slot, whatever the sequence length.  Hybrids
+  (zamba2) pay both: KV pages for their (shared) attention layers plus
+  one state page.
+
+Slot reset is a masked write of a freshly-initialised single-slot cache
+(zeros / kpos=-1 / mlstm m=-1e30) into the slot's row — uniform across all
+cache kinds, no per-architecture reset code.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, MOE, SHARED_ATTN, MAMBA2, MLSTM, SLSTM,
+                                ModelConfig)
+from repro.models.registry import get_model
+
+_ATTN_KINDS = {ATTN, MOE, SHARED_ATTN}
+_SSM_KINDS = {MAMBA2, MLSTM, SLSTM}
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_slot(cache, part, slot):
+    return jax.tree.map(
+        lambda leaf, p: jax.lax.dynamic_update_slice_in_dim(
+            leaf, p.astype(leaf.dtype), slot, axis=1),
+        cache, part)
+
+
+@jax.jit
+def _slice_slot(cache, slot):
+    return jax.tree.map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=1),
+        cache)
+
+
+class CacheManager:
+    def __init__(self, mcfg: ModelConfig, n_slots: int, max_len: int,
+                 page_size: int = 64, dtype=jnp.float32,
+                 total_pages: int = None):
+        self.mcfg, self.n_slots, self.max_len = mcfg, n_slots, max_len
+        self.page_size = page_size
+        kinds = set(mcfg.blocks())
+        self.has_kv = bool(kinds & _ATTN_KINDS)
+        self.has_state = bool(kinds & _SSM_KINDS)
+        model = get_model(mcfg)
+        self.cache = model.init_cache(mcfg, n_slots, max_len, dtype)
+        self._fresh = model.init_cache(mcfg, 1, max_len, dtype)
+        if total_pages is None:
+            total_pages = n_slots * self.pages_for(max_len)
+        self.total_pages = total_pages
+        self.free_pages = total_pages
+        self.slot_pages: List[int] = [0] * n_slots
+        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+
+    # -- page accounting ---------------------------------------------------
+    def pages_for(self, length: int) -> int:
+        """Pages a sequence of ``length`` tokens occupies in this arch's
+        cache: KV pages (capped at the physical ring size) + one
+        fixed-size state page for recurrent layers."""
+        pages = 0
+        if self.has_kv:
+            eff = min(length, self.max_len)
+            pages += math.ceil(max(eff, 1) / self.page_size)
+        if self.has_state:
+            pages += 1
+        return pages
+
+    def can_admit(self, total_len: int) -> bool:
+        return (bool(self._free_slots)
+                and self.pages_for(total_len) <= self.free_pages)
+
+    # -- slot lifecycle ----------------------------------------------------
+    def admit(self, total_len: int) -> int:
+        """Reserve a slot + pages for a request of ``total_len`` tokens
+        (prompt + max_new) and reset the slot's cache row."""
+        if not self.can_admit(total_len):
+            raise RuntimeError("admit() called with no capacity; "
+                               "check can_admit() first")
+        slot = self._free_slots.pop()
+        pages = self.pages_for(total_len)
+        self.slot_pages[slot] = pages
+        self.free_pages -= pages
+        self.cache = _write_slot(self.cache, self._fresh,
+                                 jnp.asarray(slot, jnp.int32))
+        return slot
+
+    def free(self, slot: int) -> None:
+        self.free_pages += self.slot_pages[slot]
+        self.slot_pages[slot] = 0
+        self._free_slots.append(slot)
+
+    # -- slot I/O for chunked prefill --------------------------------------
+    def slot_view(self, slot: int):
+        """The slot's (batch=1) cache slice, for the prefill-chunk step."""
+        return _slice_slot(self.cache, jnp.asarray(slot, jnp.int32))
+
+    def write_slot(self, slot: int, part) -> None:
+        self.cache = _write_slot(self.cache, part,
+                                 jnp.asarray(slot, jnp.int32))

@@ -1,0 +1,195 @@
+"""Continuous-batching serving engine for the registered architectures.
+
+Drives the jit'd inner steps from ``repro.launch.serve`` over a fixed-slot
+batch: admitted requests prefill in chunks (one slot at a time, batch=1
+cache slice) interleaved with batched single-token decode of every
+in-flight request (per-slot positions + active mask).  Works for all
+decoder-only registry archs — attention ring/KV caches, MLA latent caches,
+and mamba2/xlstm/zamba2 recurrent state slots — because the cache is an
+opaque pytree to the engine; only ``CacheManager`` accounting looks at the
+block kinds.
+
+Greedy decode of a request is bit-identical whether it runs alone or
+batched (per-row cache isolation + masked writes); stochastic sampling is
+also batch-composition-independent because the PRNG stream is keyed on
+(request seed, output position).  Capacity-limited MoE is the documented
+exception: routing competes across the batch (DESIGN.md §MoE).
+
+    engine = ServingEngine(cfg, params, n_slots=8, max_len=256)
+    engine.add_request(prompt_tokens, max_new_tokens=32)
+    outputs = engine.run()
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.serve import make_prefill_chunk_step, make_serve_step
+from repro.models.registry import get_model
+from repro.serving.cache import CacheManager
+from repro.serving.request import (DECODE, FINISHED, Request, RequestOutput,
+                                   SamplingParams)
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+# jit'd inner steps are cached on the (hashable, frozen) ModelConfig so
+# every engine over the same arch shares one compilation — a fresh engine
+# per benchmark level / test does not pay a recompile
+@functools.lru_cache(maxsize=None)
+def _jit_serve_step(mcfg: ModelConfig):
+    return jax.jit(make_serve_step(mcfg), donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_chunk_step(mcfg: ModelConfig, chunk: int):
+    return jax.jit(make_prefill_chunk_step(mcfg, chunk))
+
+
+class ServingEngine:
+    def __init__(self, mcfg: ModelConfig, params=None,
+                 sched: SchedulerConfig = None, dtype=jnp.float32,
+                 init_seed: int = 0):
+        if mcfg.is_encoder_decoder:
+            raise ValueError(
+                "ServingEngine serves decoder-only archs; enc-dec (whisper) "
+                "uses the batch-synchronous path (examples/serve_demo.py)")
+        self.mcfg = mcfg
+        self.sched_cfg = sched or SchedulerConfig()
+        model = get_model(mcfg)
+        if params is None:
+            params = model.init(jax.random.PRNGKey(init_seed), mcfg)
+        self.params = params
+        self.cachemgr = CacheManager(
+            mcfg, self.sched_cfg.n_slots, self.sched_cfg.max_len,
+            page_size=self.sched_cfg.page_size, dtype=dtype)
+        self.scheduler = Scheduler(self.sched_cfg, self.cachemgr)
+        self._decode_step = _jit_serve_step(mcfg)
+        self._chunk_step = _jit_chunk_step(mcfg, self.sched_cfg.prefill_chunk)
+        self._next_rid = 0
+        self.n_steps = 0
+
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
+                    sampling: SamplingParams = None) -> int:
+        if len(prompt) < 1 or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens>=1")
+        total = len(prompt) + max_new_tokens
+        if self.cachemgr.has_kv and total > self.sched_cfg.max_len:
+            raise ValueError(
+                f"request needs {total} cache positions > max_len="
+                f"{self.sched_cfg.max_len} (KV cache would wrap)")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, [int(t) for t in prompt], max_new_tokens,
+                      sampling or SamplingParams(),
+                      arrival_t=time.perf_counter())
+        self.scheduler.submit(req)
+        return rid
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[RequestOutput]:
+        """One scheduler step: admit, one prefill chunk, one batched decode
+        step.  Returns the requests that finished during this step."""
+        finished: List[Request] = []
+        self.scheduler.admit_ready()
+        req = self.scheduler.next_prefill()
+        if req is not None:
+            self._prefill_one_chunk(req, finished)
+        dec = self.scheduler.decode_requests()
+        if dec:
+            self._decode_all(dec, finished)
+        self.n_steps += 1
+        return [self._output(r) for r in finished]
+
+    def run(self, max_steps: int = 100_000) -> List[RequestOutput]:
+        """Drive steps until queue and slots drain; outputs by rid."""
+        outputs: List[RequestOutput] = []
+        steps = 0
+        while self.has_work():
+            outputs.extend(self.step())
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} steps")
+        return sorted(outputs, key=lambda o: o.rid)
+
+    # ------------------------------------------------------------------
+    def _prefill_one_chunk(self, req: Request, finished: List[Request]):
+        C = self.sched_cfg.prefill_chunk
+        P = len(req.prompt)
+        n = min(C, P - req.prefilled)
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :n] = req.prompt[req.prefilled:req.prefilled + n]
+        last_logits, part = self._chunk_step(
+            self.params, self.cachemgr.slot_view(req.slot),
+            jnp.asarray(buf), jnp.asarray(req.prefilled, jnp.int32),
+            jnp.asarray(n, jnp.int32))
+        self.cachemgr.write_slot(req.slot, part)
+        req.prefilled += n
+        if req.prefilled == P:
+            tok = int(np.asarray(self._sample_rows(last_logits, [req], [0]))[0])
+            req.out_tokens.append(tok)
+            req.first_token_t = time.perf_counter()
+            req.state = DECODE
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._finish(req, finished)
+
+    def _decode_all(self, dec, finished: List[Request]):
+        # full-width (n_slots) arrays so sample_tokens compiles once;
+        # inactive rows sample garbage that is never read
+        B = self.sched_cfg.n_slots
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        seeds = np.zeros((B,), np.int32)
+        counters = np.zeros((B,), np.int32)
+        for slot, r in dec:
+            tokens[slot, 0] = r.out_tokens[-1]
+            pos[slot] = len(r.prompt) + len(r.out_tokens) - 1
+            active[slot] = True
+            temps[slot] = r.sampling.temperature
+            top_ks[slot] = r.sampling.top_k
+            seeds[slot] = r.sampling.seed
+            counters[slot] = len(r.out_tokens)
+        logits, self.cachemgr.cache = self._decode_step(
+            self.params, self.cachemgr.cache, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(active))
+        toks = np.asarray(sample_tokens(
+            logits, jnp.asarray(temps), jnp.asarray(top_ks),
+            jnp.asarray(seeds), jnp.asarray(counters)))
+        for slot, r in dec:
+            r.out_tokens.append(int(toks[slot]))
+            if len(r.out_tokens) >= r.max_new_tokens:
+                self._finish(r, finished)
+
+    def _sample_rows(self, logits, reqs: List[Request], rows: List[int]):
+        """Sample one token per request from ``logits`` rows ``rows``."""
+        sel = jnp.asarray(np.asarray(rows, np.int32))
+        temps = jnp.asarray([r.sampling.temperature for r in reqs],
+                            jnp.float32)
+        top_ks = jnp.asarray([r.sampling.top_k for r in reqs], jnp.int32)
+        seeds = jnp.asarray([r.sampling.seed for r in reqs], jnp.int32)
+        counters = jnp.asarray([len(r.out_tokens) for r in reqs], jnp.int32)
+        return sample_tokens(logits[sel], temps, top_ks, seeds, counters)
+
+    def _finish(self, req: Request, finished: List[Request]):
+        req.state = FINISHED
+        req.finish_t = time.perf_counter()
+        self.scheduler.release(req)
+        finished.append(req)
+
+    @staticmethod
+    def _output(req: Request) -> RequestOutput:
+        return RequestOutput(req.rid, req.prompt, list(req.out_tokens),
+                             req.arrival_t, req.first_token_t, req.finish_t)

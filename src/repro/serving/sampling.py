@@ -1,0 +1,39 @@
+"""Per-request token sampling for the batched decode step.
+
+One jit'd function over the whole slot batch: each row carries its own
+(temperature, top_k, seed, counter).  temperature<=0 selects greedy for
+that row; top_k<=0 disables truncation.  The PRNG key for a row is
+``fold_in(PRNGKey(seed), counter)`` where ``counter`` is the request's
+output position — sampling depends only on (request seed, position,
+logits), never on batch composition, so a request samples identically
+whether it runs alone or packed with seven neighbours.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def sample_tokens(logits, temps, top_ks, seeds, counters):
+    """logits (B,V); temps (B,) f32; top_ks/seeds/counters (B,) int32
+    -> tokens (B,) int32."""
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # top-k truncation with per-row dynamic k: threshold at the k-th
+    # largest logit (ties above the threshold stay in)
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    k_idx = jnp.clip(top_ks - 1, 0, V - 1).astype(jnp.int32)
+    thresh = jnp.take_along_axis(sorted_desc, k_idx[:, None], axis=-1)
+    cut = (top_ks > 0)[:, None] & (logits < thresh)
+    scaled = jnp.where(cut, -jnp.inf,
+                       logits / jnp.maximum(temps, 1e-6)[:, None])
+
+    def row_gumbel(seed, counter):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
+        return jax.random.gumbel(key, (V,), jnp.float32)
+    g = jax.vmap(row_gumbel)(seeds, counters)
+    sampled = jnp.argmax(scaled + g, axis=-1).astype(jnp.int32)
+    return jnp.where(temps <= 0, greedy, sampled)

@@ -77,6 +77,59 @@ class TestSelection:
         pick = random_selection(rng, 10, 10)
         assert len(set(pick.tolist())) == 10
 
+    @staticmethod
+    def _check_pick(pick, counts, n_clients, n_pick):
+        """Validity + single-swap local optimality: greedy repair may not
+        claim coverage it doesn't have, and must not stop while one swap
+        could still add a class."""
+        pick = pick.tolist()
+        assert len(pick) == n_pick
+        assert len(set(pick)) == n_pick
+        assert all(0 <= c < n_clients for c in pick)
+        cov = int((counts[pick].sum(0) > 0).sum())
+        if cov == counts.shape[1]:
+            return
+        outside = [c for c in range(n_clients) if c not in set(pick)]
+        for cand in outside:
+            for j in range(n_pick):
+                rest = pick[:j] + pick[j + 1:] + [cand]
+                assert int((counts[rest].sum(0) > 0).sum()) <= cov, \
+                    (pick, j, cand)
+
+    def test_greedy_repair_does_not_lose_covered_classes(self):
+        """Regression: the old repair swapped out a member without checking
+        the removed member's classes stayed covered and never recomputed
+        `missing`, so it could return an incomplete pick while claiming
+        coverage.  Adversarial fixture: sole holders of some classes plus
+        decoy clients that force the repair path."""
+        rng = np.random.RandomState(3)
+        n_clients, n_classes, n_pick = 8, 6, 3
+        counts = np.zeros((n_clients, n_classes))
+        counts[0, 0] = 5                      # sole holder of class 0
+        counts[1, 1] = 5                      # sole holder of class 1
+        counts[2, [2, 3]] = 5
+        counts[3, [4, 5]] = 5
+        counts[4:, 0] = 1                     # decoys: class 0 only
+        for seed in range(30):
+            rng = np.random.RandomState(seed)
+            pick = class_coverage_selection(rng, n_clients, n_pick, counts,
+                                            max_tries=3)
+            self._check_pick(pick, counts, n_clients, n_pick)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), n_clients=st.integers(2, 12),
+           n_classes=st.integers(2, 8), density=st.floats(0.05, 0.9))
+    def test_greedy_repair_property(self, seed, n_clients, n_classes,
+                                    density):
+        rng = np.random.RandomState(seed)
+        counts = (rng.rand(n_clients, n_classes) < density) * \
+            rng.randint(1, 20, size=(n_clients, n_classes))
+        n_pick = rng.randint(1, n_clients + 1)
+        pick = class_coverage_selection(np.random.RandomState(seed + 1),
+                                        n_clients, n_pick, counts,
+                                        max_tries=5)
+        self._check_pick(pick, counts, n_clients, n_pick)
+
 
 class TestCheckpoint:
     def test_roundtrip(self, tmp_path):
@@ -100,6 +153,62 @@ class TestCheckpoint:
         save_checkpoint(str(tmp_path), 0, {"a": jnp.ones(2)})
         with pytest.raises(ValueError):
             restore_checkpoint(str(tmp_path), 0, {"b": jnp.ones(2)})
+
+    def test_extra_key_rejected(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"a": jnp.ones(2),
+                                           "b": jnp.ones(2)})
+        with pytest.raises(ValueError, match="mismatch"):
+            restore_checkpoint(str(tmp_path), 0, {"a": jnp.ones(2)})
+
+    def test_bf16_exact_bit_roundtrip(self, tmp_path):
+        """bf16 leaves go through npz as raw uint16 bits: restore must be
+        exact-BIT equality, not just value-close (subnormals, -0.0, large
+        magnitudes must survive)."""
+        vals = jnp.asarray([0.0, -0.0, 1.0, -1.5, 3.14159e8, 1e-40,
+                            65504.0, 2.0 ** -126], jnp.bfloat16)
+        tree = {"p": vals, "n": {"q": jnp.full((3, 2), -2.718, jnp.bfloat16)}}
+        save_checkpoint(str(tmp_path), 1, tree)
+        restored = restore_checkpoint(str(tmp_path), 1,
+                                      jax.tree.map(jnp.zeros_like, tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            assert np.asarray(b).dtype == np.asarray(a).dtype
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint16), np.asarray(b).view(np.uint16))
+
+    @pytest.mark.parametrize("dt", ["float8_e4m3fn", "float8_e5m2"])
+    def test_fp8_exact_bit_roundtrip(self, tmp_path, dt):
+        dtype = jnp.dtype(dt)
+        rng = np.random.RandomState(0)
+        tree = {"w": jnp.asarray(rng.randn(4, 5), dtype)}
+        save_checkpoint(str(tmp_path), 2, tree)
+        restored = restore_checkpoint(str(tmp_path), 2,
+                                      jax.tree.map(jnp.zeros_like, tree))
+        a, b = np.asarray(tree["w"]), np.asarray(restored["w"])
+        assert b.dtype == a.dtype
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+
+    def test_eight_byte_nonbuiltin_roundtrip(self, tmp_path):
+        """Parameterised 8-byte dtypes (datetime64[ns] reports isbuiltin
+        != 1) take the raw-bits path via uint64, not a KeyError."""
+        tree = {"t": np.array([0, 1_700_000_000_000_000_000],
+                              "datetime64[ns]")}
+        save_checkpoint(str(tmp_path), 4, tree)
+        restored = restore_checkpoint(str(tmp_path), 4,
+                                      {"t": np.zeros(2, "datetime64[ns]")})
+        np.testing.assert_array_equal(restored["t"], tree["t"])
+
+    def test_failed_save_leaves_no_tmp_file(self, tmp_path, monkeypatch):
+        """A save that crashes mid-write must clean up its tmp file so the
+        checkpoint directory never accumulates torn partials."""
+        import repro.checkpointing.checkpoint as C
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+        monkeypatch.setattr(C.np, "savez", boom)
+        with pytest.raises(OSError, match="disk full"):
+            save_checkpoint(str(tmp_path), 3, {"a": jnp.ones(2)})
+        assert os.listdir(str(tmp_path)) == []
+        assert latest_step(str(tmp_path)) is None
 
 
 class TestOptim:

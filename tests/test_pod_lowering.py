@@ -57,12 +57,11 @@ def test_serve_step_lowers_on_host_mesh(arch):
     mesh = make_host_mesh()
     with mesh:
         state_sds = I.state_inputs(mcfg, FED, RUN, mesh, mode="serve")
-        cache_sds, tokens, cur_pos = I.decode_inputs(mcfg, SMALL_DECODE,
-                                                     mesh, False,
-                                                     cache_dtype=jnp.float32)
+        cache_sds, tokens, cur_pos, active = I.decode_inputs(
+            mcfg, SMALL_DECODE, mesh, False, cache_dtype=jnp.float32)
         step = make_serve_step(mcfg)
         compiled = jax.jit(step).lower(state_sds["params"], cache_sds,
-                                       tokens, cur_pos).compile()
+                                       tokens, cur_pos, active).compile()
         assert compiled is not None
 
 

@@ -1,4 +1,5 @@
 """Federated simulator integration tests (paper-scale engine, miniaturised)."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -78,3 +79,37 @@ def test_resnet18_one_round(data):
     s = FederatedSimulator(fed, sim, x, y, xt, yt, parts)
     hist = s.run()
     assert np.isfinite(hist[-1]["loss"])
+
+
+# ---------------------------------------------------------------------------
+# Falsy-default regressions: explicit 0 / falsy stored values are not "unset"
+# ---------------------------------------------------------------------------
+def test_run_rounds_zero_is_zero_rounds(data):
+    """run(rounds=0) must run zero rounds, not fall back to sim.rounds."""
+    s = make_sim(data, "fedadc", rounds=12)
+    before = jnp.concatenate([x.ravel() for x in
+                              jax.tree.leaves(s.params)])
+    hist = s.run(rounds=0)
+    after = jnp.concatenate([x.ravel() for x in jax.tree.leaves(s.params)])
+    assert hist == [] and bool(jnp.array_equal(before, after))
+
+
+def test_client_batches_explicit_zero_and_default(data):
+    s = make_sim(data, "fedadc")                 # fed.local_steps == 4
+    xb, yb = s._client_batches(0)
+    assert xb.shape[0] == 4
+    xb, yb = s._client_batches(0, local_steps=0)   # explicit 0, not unset
+    assert xb.shape[0] == 0 and yb.shape == (0, s.sim.batch_size)
+    xb, yb = s._client_batches(0, local_steps=2)
+    assert xb.shape[0] == 2
+
+
+def test_falsy_client_state_not_reinitialised(data):
+    """A stored per-client state whose pytree is falsy (zero scalar) must be
+    returned as-is, not silently replaced by a fresh init."""
+    s = make_sim(data, "scaffold", rounds=1)
+    s.client_states[3] = jnp.zeros(())           # falsy jnp scalar
+    stacked = s._get_client_states([3])
+    # old `or`-based code would return the dict from _client_state_init()
+    assert not isinstance(stacked, dict)
+    assert stacked.shape == (1,) and float(stacked[0]) == 0.0

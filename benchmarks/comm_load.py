@@ -2,13 +2,25 @@
 the downlink additionally carries the momentum/model-difference broadcast
 (2× naive, 1× when Δ̄-broadcast overlaps compute as the paper proposes).
 
-Analytic bytes/round per strategy for a chosen arch, plus the overlap
-accounting — this is the paper's own table, made concrete per architecture.
+Two tables per architecture, side by side:
+
+* **analytic** — the paper's own bytes/round accounting (n_params × dtype
+  bytes × clients), per strategy.
+* **measured** — what the compression subsystem would actually put on the
+  wire per client upload, from the real parameter pytree of the arch
+  (``jax.eval_shape``, no allocation) through each compressor's exact wire
+  format (repro.federated.compression.wire_nbytes).
+
+The measured column is what ``benchmarks/comm_sweep.py`` trades against
+accuracy; here it is reported against the analytic floor so the two
+accountings can be compared at a glance.
 """
 import jax
 
 from benchmarks.common import emit
 from repro.configs import ARCHS
+from repro.federated import compression as C
+from repro.models.registry import get_model
 
 
 def bytes_per_round(n_params, clients, dtype_bytes=4):
@@ -25,6 +37,22 @@ def bytes_per_round(n_params, clients, dtype_bytes=4):
     }
 
 
+def param_shapes(arch: str):
+    """Parameter pytree of the arch as ShapeDtypeStructs (no allocation)."""
+    mcfg = ARCHS[arch]
+    model = get_model(mcfg)
+    return jax.eval_shape(lambda r: model.init(r, mcfg),
+                          jax.random.PRNGKey(0))
+
+
+MEASURED = (
+    ("raw", None),
+    ("topk10", C.TopKCompressor(0.10)),
+    ("qsgd4", C.QSGDCompressor(4)),
+    ("qsgd8", C.QSGDCompressor(8)),
+)
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     for arch in ("qwen3-4b", "qwen3-14b"):
@@ -36,6 +64,18 @@ def main(rows=None):
                 f"comm.{arch}.{strat}", 0,
                 f"up_GB={t['up']/2**30:.2f};down_GB={t['down']/2**30:.2f};"
                 f"down_vs_fedavg={t['down']/base:.2f}x"))
+        # measured per-client upload bytes through the compression wire
+        # formats, against the analytic raw uplink as the reference
+        shapes = param_shapes(arch)
+        raw = C.raw_nbytes(shapes)
+        analytic_up = n * 4
+        for name, comp in MEASURED:
+            b = raw if comp is None else comp.wire_nbytes(shapes)
+            rows.append(emit(
+                f"comm.{arch}.measured.{name}", 0,
+                f"up_GB_per_client={b/2**30:.3f};"
+                f"vs_analytic={b/analytic_up:.3f}x;"
+                f"vs_raw={raw/b:.2f}x_smaller"))
     return rows
 
 

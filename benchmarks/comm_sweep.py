@@ -1,0 +1,100 @@
+"""Accuracy-vs-uplink-bytes frontier (the measured version of Sec. II-A).
+
+Sweeps strategy × compressor on the synthetic non-IID benchmark (sorted
+2-class shards, the paper's hardest skew) and reports, per cell, the final
+accuracy together with the *measured* uplink bytes the compression wire
+formats actually transport — turning the paper's analytic comm-load table
+into an accuracy/bandwidth trade-off.
+
+Headline check (asserted into the JSON, gated in CI): top-k 10% with error
+feedback stays within 2 accuracy points of the uncompressed FedADC run
+while shrinking measured uplink bytes ≥ 5×.
+
+Emits ``BENCH_comm.json`` plus the repo-standard CSV rows.  The committed
+JSON is produced by the default (smoke-scale) configuration so the CI
+``bench-smoke`` job can regenerate it deterministically and diff within
+tolerance; ``--rounds`` scales the sweep up for real frontier plots.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import dataset, emit, partitions, run_fl
+
+STRATEGIES = ("fedavg", "slowmo", "fedadc")
+COMPRESSORS = (
+    ("none", {"compressor": "none"}),
+    ("topk10_ef", {"compressor": "topk", "topk_frac": 0.10,
+                   "error_feedback": True}),
+    ("qsgd4_ef", {"compressor": "qsgd", "qsgd_bits": 4,
+                  "error_feedback": True}),
+)
+
+
+def sweep(rounds=90, n_clients=20, seed=0):
+    data = dataset()
+    parts = partitions(data[1], n_clients, "sort", 2, seed=seed)
+    cells = []
+    for strat in STRATEGIES:
+        for cname, extra in COMPRESSORS:
+            r = run_fl(strat, parts, data, rounds=rounds,
+                       n_clients=n_clients, seed=seed, extra_fed=extra)
+            s = r["sim"]
+            cells.append({
+                "strategy": strat,
+                "compressor": cname,
+                "acc": round(r["acc"], 4),
+                "uplink_bytes": int(s.uplink_bytes),
+                "uplink_bytes_raw": int(s.uplink_bytes_raw),
+                "bytes_reduction": round(
+                    s.uplink_bytes_raw / s.uplink_bytes, 2),
+                "us_per_round": r["us_per_round"],
+            })
+    return cells
+
+
+def main(rows=None, rounds=90, out_json="BENCH_comm.json"):
+    rows = rows if rows is not None else []
+    cells = sweep(rounds=rounds)
+    by = {(c["strategy"], c["compressor"]): c for c in cells}
+    for c in cells:
+        rows.append(emit(
+            f"comm_sweep.{c['strategy']}.{c['compressor']}",
+            c["us_per_round"],
+            f"acc={c['acc']};up_MB={c['uplink_bytes']/2**20:.2f};"
+            f"reduction={c['bytes_reduction']:.2f}x"))
+    base = by[("fedadc", "none")]
+    topk = by[("fedadc", "topk10_ef")]
+    acc_gap = base["acc"] - topk["acc"]
+    reduction = topk["bytes_reduction"]
+    rows.append(emit("comm_sweep.fedadc_topk10_vs_uncompressed", 0,
+                     f"acc_gap={acc_gap:.4f};bytes_reduction={reduction:.2f}x"))
+    report = {
+        "benchmark": "synthetic non-IID (sorted 2-class shards)",
+        "rounds": rounds,
+        "cells": cells,
+        "headline": {
+            "fedadc_acc_uncompressed": base["acc"],
+            "fedadc_acc_topk10_ef": topk["acc"],
+            "acc_gap": round(acc_gap, 4),
+            "bytes_reduction": reduction,
+            "within_2pts": bool(acc_gap <= 0.02),
+            "reduction_ge_5x": bool(reduction >= 5.0),
+        },
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: pin the committed-JSON configuration "
+                         "(90 rounds) regardless of --rounds")
+    ap.add_argument("--rounds", type=int, default=90)
+    ap.add_argument("--out", default="BENCH_comm.json")
+    args = ap.parse_args()
+    main(rounds=90 if args.smoke else args.rounds, out_json=args.out)

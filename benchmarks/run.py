@@ -16,6 +16,12 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   serving_bench      — continuous batching vs serial decode: offered-load
                        sweep, tokens/sec + p50/p95 latency
                        (DESIGN.md §Serving; emits BENCH_serving.json)
+  comm_load          — Sec. II-A   analytic bytes/round per strategy, side by
+                       side with measured per-client wire bytes through each
+                       compressor (DESIGN.md §Compression)
+  comm_sweep         — accuracy-vs-uplink-bytes frontier, strategy ×
+                       compressor on the non-IID benchmark (emits
+                       BENCH_comm.json)
 """
 import argparse
 import time
@@ -27,7 +33,7 @@ def main() -> None:
                     help="comma-separated benchmark names")
     args = ap.parse_args()
 
-    from benchmarks import (ablation_beta, clustering, comm_load,
+    from benchmarks import (ablation_beta, clustering, comm_load, comm_sweep,
                             fig1_acceleration, fig2_robustness, fig5_scale,
                             fig7_personalization, kernels_bench, lm_round,
                             roofline_report, serving_bench, straggler_bench,
@@ -35,6 +41,7 @@ def main() -> None:
     mods = {
         "kernels_bench": kernels_bench,
         "comm_load": comm_load,
+        "comm_sweep": comm_sweep,
         "roofline_report": roofline_report,
         "fig1_acceleration": fig1_acceleration,
         "fig2_robustness": fig2_robustness,

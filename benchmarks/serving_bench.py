@@ -65,16 +65,28 @@ def run_level(params, prompts, n_slots, prefill_chunk=16):
     }, outs
 
 
-def smoke():
+def smoke(out_json="BENCH_serving_smoke.json"):
     """CI job: 8 requests through the 4-slot scheduler, greedy outputs
-    bit-identical to the serial engine."""
+    bit-identical to the serial engine.  Emits a JSON of the deterministic
+    counters (token/step counts, not wall-clock) so the bench-smoke gate
+    can diff it against the committed copy."""
     model = get_model(TINY)
     params = model.init(jax.random.PRNGKey(0), TINY)
     prompts = make_requests(8)
-    _, batched = run_level(params, prompts, n_slots=4)
-    _, serial = run_level(params, prompts, n_slots=1)
+    res_b, batched = run_level(params, prompts, n_slots=4)
+    res_s, serial = run_level(params, prompts, n_slots=1)
     assert [o.tokens for o in batched] == [o.tokens for o in serial], \
         "batched greedy output diverged from serial"
+    report = {
+        "n_requests": len(prompts),
+        "gen_tokens": res_b["gen_tokens"],
+        "engine_steps_batched": res_b["engine_steps"],
+        "engine_steps_serial": res_s["engine_steps"],
+        "batched_equals_serial": True,
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_json}")
     print(f"serving smoke OK: {len(prompts)} requests, "
           f"{sum(len(o.tokens) for o in batched)} tokens, "
           f"batched == serial")
@@ -115,8 +127,11 @@ if __name__ == "__main__":
                     help="CI: 8 requests through the scheduler + identity "
                          "check vs serial")
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--out", default=None,
+                    help="JSON output path (default depends on mode)")
     args = ap.parse_args()
     if args.smoke:
-        smoke()
+        smoke(out_json=args.out or "BENCH_serving_smoke.json")
     else:
-        main(n_requests=args.requests)
+        main(n_requests=args.requests,
+             out_json=args.out or "BENCH_serving.json")

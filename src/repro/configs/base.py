@@ -232,6 +232,13 @@ class FedConfig:
                                    # clients_per_round (synchronous barrier)
     staleness_mode: str = "poly"   # none | poly ((1+s)^-a) | exp (a^s)
     staleness_factor: float = 0.5  # `a` in the discount above
+    # uplink delta compression (repro.federated.compression): none bypasses
+    # the hook entirely; identity goes through it losslessly (bit-identity
+    # tested); topk/qsgd are lossy with per-client error feedback
+    compressor: str = "none"       # none | identity | topk | qsgd
+    topk_frac: float = 0.1         # fraction of entries kept per leaf
+    qsgd_bits: int = 8             # magnitude bits (sign sent separately)
+    error_feedback: bool = True    # re-inject round-t residual at t+1
 
 
 # ---------------------------------------------------------------------------

@@ -73,6 +73,20 @@ class FedAvg:
         g, aux = grad_fn(theta, batch)
         return _sgd_step(theta, g, fed.eta, fed), extra, aux
 
+    def compress_delta(self, delta, ef, key, fed):
+        """Client-side uplink hook (one client's delta, vmap-safe): lossy-
+        compress against the client's error-feedback memory and return the
+        *decompressed* delta (the server's wire reconstruction) plus the new
+        EF residual.  Every engine routes its uplink through this hook
+        *before* aggregation, so the server update — in particular the
+        FedADC momentum recursion — always consumes decompressed aggregates
+        (DESIGN.md §Compression).  No-op when fed.compressor == 'none'."""
+        from repro.federated.compression import get_compressor  # lazy: layering
+        comp = get_compressor(fed)
+        if comp is None:
+            return delta, ef
+        return comp.compress(delta, ef, key)
+
     def server_aggregate(self, deltas, weights, fed):
         """Δ̄ = Σ_i w_i·Δ_i / Σ_i w_i over client-stacked deltas.  Shared by
         every strategy; with fed.use_pallas the reduction runs as one fused

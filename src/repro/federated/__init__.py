@@ -5,15 +5,20 @@
                      FedADC (buffered-K aggregation).
 * ``hetero``       — client system model: speeds, availability, variable H_i.
 * ``aggregation``  — pluggable server aggregators (uniform/examples/DRAG).
+* ``compression``  — uplink delta compressors (identity/top-k/QSGD) with
+                     per-client error feedback.
 
-See DESIGN.md §Engines and §Heterogeneity.
+See DESIGN.md §Engines, §Heterogeneity, and §Compression.
 """
 from repro.federated.aggregation import compute_weights, weighted_mean
 from repro.federated.async_engine import AsyncFederatedSimulator
+from repro.federated.compression import (get_compressor, raw_nbytes,
+                                         uplink_nbytes)
 from repro.federated.hetero import (ClientSystemModel, fednova_scale,
                                     staleness_discount)
 from repro.federated.simulator import FederatedSimulator, SimConfig
 
 __all__ = ["FederatedSimulator", "SimConfig", "AsyncFederatedSimulator",
            "ClientSystemModel", "fednova_scale", "staleness_discount",
-           "compute_weights", "weighted_mean"]
+           "compute_weights", "weighted_mean", "get_compressor",
+           "raw_nbytes", "uplink_nbytes"]

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FedConfig, HeteroConfig
+from repro.core import tree as T
 from repro.core.selection import SELECTORS
 from repro.federated import aggregation as A
 from repro.federated.hetero import ClientSystemModel, staleness_discount
@@ -84,22 +85,33 @@ class AsyncFederatedSimulator(FederatedSimulator):
         self.vtime = 0.0              # virtual clock
         self.event_log: List[tuple] = []   # (kind, time, client, version)
         self.staleness_seen: List[int] = []
+        self._dispatch_ctr = 0        # compression PRNG stream, event order
 
     # ------------------------------------------------------------------
     def _make_deltas_fn(self):
-        """(params, server_state, xb, yb, counts) -> stacked deltas, losses
-        for one dispatch group — the same vmapped client_update the
-        synchronous round uses, minus the aggregation."""
+        """(params, server_state, xb, yb, counts, cstates, efs, keys)
+        -> (stacked uplink deltas, new EF states, losses) for one dispatch
+        group — the same vmapped client_update the synchronous round uses,
+        minus the aggregation, plus the per-client compression hook (each
+        client compresses against its EF memory at dispatch; the server
+        later discounts/aggregates the decompressed reconstructions)."""
         strategy = self.strategy
         fed = self.fed
         client_update = self._make_client_update()
+        compressed = self.compressor is not None
 
-        def deltas_fn(params, server_state, xb, yb, counts, cstates):
+        def deltas_fn(params, server_state, xb, yb, counts, cstates, efs,
+                      keys):
             ctx = strategy.client_setup(server_state, params, fed)
             deltas, _, losses, _ = jax.vmap(
                 lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
-            return deltas, losses
+            new_efs = efs
+            if compressed:
+                deltas, new_efs = jax.vmap(
+                    lambda d, e, k: strategy.compress_delta(d, e, k, fed)
+                )(deltas, efs, keys)
+            return deltas, new_efs, losses
 
         return deltas_fn
 
@@ -160,8 +172,16 @@ class AsyncFederatedSimulator(FederatedSimulator):
             yb = jnp.asarray(np.stack(ys))
             counts = jnp.asarray(self.counts[np.asarray(group)])
             cstates = self._get_client_states(group)
-            deltas, losses = self._deltas_fn(self.params, self.server_state,
-                                             xb, yb, counts, cstates)
+            efs = self._get_ef_states(group)
+            keys = jax.random.split(
+                jax.random.fold_in(self._comp_key, self._dispatch_ctr),
+                len(group))
+            self._dispatch_ctr += 1
+            deltas, new_efs, losses = self._deltas_fn(
+                self.params, self.server_state, xb, yb, counts, cstates,
+                efs, keys)
+            if self.ef_enabled:
+                self._put_ef_states(group, new_efs)
             for j, c in enumerate(group):
                 rec = _InFlight(
                     client=c, version=self.version,
@@ -210,10 +230,22 @@ class AsyncFederatedSimulator(FederatedSimulator):
             if self.system.drops_out(rec.client):
                 self.event_log.append(("drop", self.vtime, rec.client,
                                        self.version))
+                if self.ef_enabled:
+                    # the upload is lost: fold the untransported
+                    # reconstruction back into the client's EF memory so
+                    # mass is conserved (Σ arrived q + e = Σ Δ) even when
+                    # the client was re-dispatched meanwhile — addition
+                    # commutes with later EF updates
+                    cur = self.ef_states.get(rec.client)
+                    self.ef_states[rec.client] = T.add(
+                        self._ef_init() if cur is None else cur, rec.delta)
                 self._dispatch(heap, 1, self.vtime)
                 continue
             self.event_log.append(("arrive", self.vtime, rec.client,
                                    rec.version))
+            # a successful upload — dropped clients never transmit
+            self.uplink_bytes += self._client_uplink_nbytes
+            self.uplink_bytes_raw += self._client_uplink_raw
             buffer.append(rec)
             if len(buffer) >= K:
                 loss = self._flush(buffer)

@@ -4,7 +4,9 @@ Reproduces the paper's experimental setup: N clients with non-iid partitions
 (sort-and-partition or Dirichlet), cN sampled per round, H local SGD steps,
 then the strategy's server update.  Selected clients are vmapped into a
 single jit call per round.  Stateful-client strategies (SCAFFOLD, FedDyn,
-MOON) keep their per-client state in a host-side numpy store.
+MOON) keep their per-client state in a host-side numpy store; the uplink
+compression error-feedback residuals (DESIGN.md §Compression) ride a second
+store through the same gather/scatter plumbing.
 
 This engine runs the paper's CNN / ResNet-18 experiments; the pod-scale
 engine in ``repro.launch.train`` runs the assigned big architectures.
@@ -26,6 +28,7 @@ from repro.core.selection import SELECTORS
 from repro.core.strategies import get_strategy
 from repro.data.partition import class_counts
 from repro.federated import aggregation as A
+from repro.federated import compression as C
 from repro.models.vision import VISION_MODELS
 
 
@@ -84,6 +87,25 @@ class FederatedSimulator:
         self.stateful = not getattr(self.strategy, "stateless_clients", True) \
             or fed.strategy == "moon"
         self.client_states: Dict[int, object] = {}
+        self.compressor = C.get_compressor(fed)
+        if self.compressor is not None and self.compressor.lossy \
+                and fed.strategy in ("scaffold", "feddyn"):
+            # their server corrections are rebuilt from auxiliary uplink
+            # state (c_i deltas / raw drift sums) the compressors do not
+            # model; a lossy delta would silently break those invariants
+            raise ValueError(
+                f"compressor={fed.compressor!r} is not supported with "
+                f"{fed.strategy!r}; use compressor='none'")
+        # EF residuals ride the same host-side per-client store mechanics as
+        # the SCAFFOLD/FedDyn client state (a second store, same plumbing)
+        self.ef_enabled = (self.compressor is not None
+                          and self.compressor.lossy and fed.error_feedback)
+        self.ef_states: Dict[int, object] = {}
+        self._comp_key = jax.random.PRNGKey(sim.seed ^ 0x5F5E1)
+        self._client_uplink_nbytes = C.uplink_nbytes(fed, self.params)
+        self._client_uplink_raw = C.raw_nbytes(self.params)
+        self.uplink_bytes = 0          # measured (post-compression) total
+        self.uplink_bytes_raw = 0      # uncompressed baseline total
         self._round_fn = jax.jit(self._make_round_fn())
         self._eval_fn = jax.jit(self._make_eval_fn())
         self.history: List[Dict] = []
@@ -97,18 +119,38 @@ class FederatedSimulator:
             return s.client_state_init(self.params)
         return {"_": jnp.zeros(())}
 
-    def _get_client_states(self, picks):
+    def _gather_states(self, store, picks, init_fn):
         # `is None`, not truthiness: a stored state whose pytree happens to
         # be falsy (e.g. a zero scalar) must not be silently re-initialised
         states = []
         for c in picks:
-            s = self.client_states.get(int(c))
-            states.append(self._client_state_init() if s is None else s)
+            s = store.get(int(c))
+            states.append(init_fn() if s is None else s)
         return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
-    def _put_client_states(self, picks, stacked):
+    @staticmethod
+    def _scatter_states(store, picks, stacked):
         for j, c in enumerate(picks):
-            self.client_states[int(c)] = jax.tree.map(lambda x: x[j], stacked)
+            store[int(c)] = jax.tree.map(lambda x: x[j], stacked)
+
+    def _get_client_states(self, picks):
+        return self._gather_states(self.client_states, picks,
+                                   self._client_state_init)
+
+    def _put_client_states(self, picks, stacked):
+        self._scatter_states(self.client_states, picks, stacked)
+
+    # --- error-feedback store (same plumbing, keyed by client id) --------
+    def _ef_init(self):
+        if self.compressor is not None and self.compressor.lossy:
+            return T.zeros_like(self.params)
+        return {"_": jnp.zeros(())}    # hook bypassed / lossless passthrough
+
+    def _get_ef_states(self, picks):
+        return self._gather_states(self.ef_states, picks, self._ef_init)
+
+    def _put_ef_states(self, picks, stacked):
+        self._scatter_states(self.ef_states, picks, stacked)
 
     # ------------------------------------------------------------------
     def _local_loss(self, theta, xb, yb, theta_t, counts, cstate):
@@ -190,13 +232,24 @@ class FederatedSimulator:
     def _make_round_fn(self):
         strategy, fed = self.strategy, self.fed
         client_update = self._make_client_update()
+        compressed = self.compressor is not None
 
         def round_fn(params, server_state, xb, yb, counts, cstates,
-                     n_examples):
+                     n_examples, efs, key):
             ctx = strategy.client_setup(server_state, params, fed)
             deltas, ncs, losses, theta_Hs = jax.vmap(
                 lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
+            if compressed:
+                # uplink: each client ships q(Δ + e); the server aggregates
+                # the decompressed reconstructions below, so the momentum
+                # recursion in server_update composes with the lossy wire
+                keys = jax.random.split(key, xb.shape[0])
+                deltas, new_efs = jax.vmap(
+                    lambda d, e, k: strategy.compress_delta(d, e, k, fed)
+                )(deltas, efs, keys)
+            else:
+                new_efs = efs
             weights = A.compute_weights(
                 fed.aggregator, deltas, n_examples=n_examples,
                 ref=server_state.get("m"), lam=fed.drag_lambda)
@@ -216,7 +269,7 @@ class FederatedSimulator:
             else:
                 new_params, new_ss = strategy.server_update(
                     server_state, params, mean_delta, fed)
-            return new_params, new_ss, ncs, jnp.mean(losses)
+            return new_params, new_ss, ncs, new_efs, jnp.mean(losses)
 
         return round_fn
 
@@ -262,11 +315,16 @@ class FederatedSimulator:
             cstates = self._get_client_states(picks)
             n_examples = jnp.asarray([len(self.parts[int(c)]) for c in picks],
                                      jnp.float32)
-            self.params, self.server_state, ncs, loss = self._round_fn(
+            efs = self._get_ef_states(picks)
+            self.params, self.server_state, ncs, nefs, loss = self._round_fn(
                 self.params, self.server_state, xb, yb, counts, cstates,
-                n_examples)
+                n_examples, efs, jax.random.fold_in(self._comp_key, t))
             if self.stateful:
                 self._put_client_states(picks, ncs)
+            if self.ef_enabled:
+                self._put_ef_states(picks, nefs)
+            self.uplink_bytes += len(picks) * self._client_uplink_nbytes
+            self.uplink_bytes_raw += len(picks) * self._client_uplink_raw
             if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()
                 self.history.append({"round": t + 1, "acc": acc,

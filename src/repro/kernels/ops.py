@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import compress as _cp
 from repro.kernels import fedadc_update as _fu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import kd_loss as _kd
@@ -93,6 +94,29 @@ def weighted_delta_reduce(stacked, weights):
         out = _wr.weighted_reduce_2d(tiles, weights, interpret=_interpret())
         return _from_tiles(out, pad, d.shape[1:], d.dtype)
     return jax.tree.map(leaf, stacked)
+
+
+# ---------------------------------------------------------------------------
+# delta compression — single-leaf quantise/sparsify round trips
+# ---------------------------------------------------------------------------
+def qsgd_compress_leaf(v, u, scale, s):
+    """Stochastic uniform quantise-dequantise on one leaf.  `u` uniform draw
+    (v's shape), `scale` per-leaf scalar, `s` static level count.
+    -> (dequantised q, residual v − q), both v's shape/dtype."""
+    vt, pad = _as_tiles(v)
+    ut, _ = _as_tiles(u.astype(v.dtype))
+    q, r = _cp.qsgd_2d(vt, ut, scale, s, interpret=_interpret())
+    return (_from_tiles(q, pad, v.shape, v.dtype),
+            _from_tiles(r, pad, v.shape, v.dtype))
+
+
+def topk_compress_leaf(v, thresh):
+    """Magnitude-threshold select on one leaf (top-k with τ precomputed).
+    -> (selected q, residual v − q)."""
+    vt, pad = _as_tiles(v)
+    q, r = _cp.threshold_select_2d(vt, thresh, interpret=_interpret())
+    return (_from_tiles(q, pad, v.shape, v.dtype),
+            _from_tiles(r, pad, v.shape, v.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,31 @@ def weighted_delta_reduce(deltas, weights):
 
 
 # ---------------------------------------------------------------------------
+# delta compression (uplink quantise/sparsify round trips)
+# ---------------------------------------------------------------------------
+def qsgd_quantize(v, u, scale, s):
+    """QSGD stochastic uniform quantise-dequantise.  `u` is the uniform
+    draw (same shape as v), `scale` the per-leaf max magnitude, `s` the
+    number of magnitude levels.  -> (dequantised q, residual v − q)."""
+    dtype = v.dtype
+    inv = jnp.where(scale > 0,
+                    jnp.asarray(float(s), dtype) / jnp.maximum(scale, 1e-30),
+                    jnp.zeros((), dtype))
+    y = jnp.abs(v) * inv
+    lower = jnp.floor(y)
+    level = lower + (u < (y - lower)).astype(dtype)
+    q = jnp.sign(v) * level * (scale / jnp.asarray(float(s), dtype))
+    return q, v - q
+
+
+def topk_threshold_select(v, thresh):
+    """Magnitude-threshold select (top-k with τ = k-th largest |v|).
+    -> (selected q, residual v − q)."""
+    q = jnp.where(jnp.abs(v) >= thresh, v, jnp.zeros_like(v))
+    return q, v - q
+
+
+# ---------------------------------------------------------------------------
 # flash attention (causal, GQA, optional sliding window)
 # ---------------------------------------------------------------------------
 def flash_attention(q, k, v, causal=True, window=0):

@@ -103,6 +103,13 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             "drag aggregation in the pod engine needs a server-momentum "
             "reference (slowmo/fedadc/fedadc_double); the client-serial "
             "scan has no round mean to fall back on.")
+    from repro.federated.compression import get_compressor
+    compressor = get_compressor(fed)
+    if compressor is not None and compressor.lossy and fed.error_feedback:
+        raise ValueError(
+            "the pod engine is stateless-client (no per-client store to "
+            "carry EF residuals across rounds); use error_feedback=False "
+            "or run the simulator / async engine.")
     model = get_model(mcfg)
     strategy = get_strategy(fed.strategy)
     loss_fn = _local_objective(model, mcfg, fed, run)
@@ -129,21 +136,30 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         (theta_H, _), ls = jax.lax.scan(local, (theta_t, extra0), cb)
         return T.sub(theta_t, theta_H), jnp.mean(ls)
 
-    def per_group(theta_t, ctx, ref, cbs):
+    def per_group(theta_t, ctx, ref, cbs, gkey):
         """cbs: dict with leading (CS, H, b) — serial clients, weighted
         Δ-accumulation.  The aggregator weight for each client is computed in
         streaming form (repro.federated.aggregation.streaming_weight) against
         the server-momentum reference direction, so DRAG-style adaptive
-        weighting works without materialising the CS deltas."""
-        def serial(carry, cb):
+        weighting works without materialising the CS deltas.  Each client's
+        delta passes through the uplink compression hook (zero EF memory —
+        stateless engine) before weighting/accumulation, so the aggregate is
+        built from the server's wire reconstructions."""
+        cs = jax.tree.leaves(cbs)[0].shape[0]
+        ckeys = jax.random.split(gkey, cs)
+
+        def serial(carry, inp):
+            cb, ck = inp
             acc, wsum = carry
             d, l = client_delta(theta_t, ctx, cb)
+            if compressor is not None:
+                d, _ = strategy.compress_delta(d, T.zeros_like(d), ck, fed)
             w = A.streaming_weight(d, ref, fed.aggregator, fed.drag_lambda)
             acc = jax.tree.map(lambda a, di: a + w.astype(di.dtype) * di,
                                acc, d)
             return (acc, wsum + w), l
         acc0 = (T.zeros_like(theta_t), jnp.zeros(()))
-        (acc, wsum), ls = jax.lax.scan(serial, acc0, cbs)
+        (acc, wsum), ls = jax.lax.scan(serial, acc0, (cbs, ckeys))
         return acc, wsum, jnp.mean(ls)
 
     compute_dtype = jnp.dtype(run.compute_dtype)
@@ -168,15 +184,22 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         ctx = strategy.client_setup(server_ctx_state, theta_t, fed)
         ref = server_ctx_state.get("m") if fed.aggregator == "drag" else None
         CP = batch["tokens"].shape[0]
+        # per-round compression randomness, deterministic in (run seed,
+        # round index) so replicate experiments draw independent noise
+        pod_keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(run.seed),
+                               state["round"]), CP)
         if CP == 1:
             squeezed = jax.tree.map(lambda x: x[0], batch)
-            acc, wsum, loss = per_group(theta_t, ctx, ref, squeezed)
+            acc, wsum, loss = per_group(theta_t, ctx, ref, squeezed,
+                                        pod_keys[0])
             group_means = jax.tree.map(
                 lambda a: (a / wsum.astype(a.dtype))[None], acc)
             gweights = wsum[None]
         else:
             accs, wsums, losses = jax.vmap(
-                lambda cbs: per_group(theta_t, ctx, ref, cbs))(batch)
+                lambda cbs, gk: per_group(theta_t, ctx, ref, cbs, gk)
+            )(batch, pod_keys)
             group_means = jax.tree.map(
                 lambda a: a / wsums.reshape((-1,) + (1,) * (a.ndim - 1)
                                             ).astype(a.dtype), accs)

@@ -1,0 +1,282 @@
+"""Uplink compression subsystem: wire-format byte accounting, error-feedback
+exactness (compressor-level bitwise, engine-level through the round loop),
+identity-compressor bit-parity across all three engines, and the
+engine/strategy validation rules (DESIGN.md §Compression)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import FedConfig, HeteroConfig, RunConfig
+from repro.core import tree as T
+from repro.data.partition import sort_and_partition
+from repro.data.synthetic import make_image_dataset
+from repro.federated import compression as C
+from repro.federated.async_engine import AsyncFederatedSimulator
+from repro.federated.simulator import FederatedSimulator, SimConfig
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, xt, yt = make_image_dataset(600, 150, 10, image_size=16, seed=0,
+                                      noise=0.5)
+    parts = sort_and_partition(y, 10, s=2, seed=0)
+    return x, y, xt, yt, parts
+
+
+def _fed(strategy="fedadc", **kw):
+    base = dict(local_steps=4, clients_per_round=3, n_clients=10, eta=0.03,
+                beta_global=0.6, beta_local=0.6)
+    base.update(kw)
+    return FedConfig(strategy=strategy, **base)
+
+
+def _sim(rounds=3, **kw):
+    base = dict(model="cnn", n_classes=10, batch_size=16, rounds=rounds,
+                eval_every=rounds, cnn_width=8, seed=1)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _tree(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (64, 32)),
+            "b": jax.random.normal(k2, (17,))}
+
+
+def _assert_trees_equal(a, b, exact=True, atol=0.0):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=0, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# wire-format byte accounting
+# ---------------------------------------------------------------------------
+class TestWireAccounting:
+    def test_identity_equals_raw(self):
+        t = _tree()
+        assert C.IdentityCompressor().wire_nbytes(t) == C.raw_nbytes(t)
+        assert C.raw_nbytes(t) == (64 * 32 + 17) * 4
+
+    def test_topk10_reduction_at_least_5x(self):
+        t = _tree()
+        comp = C.TopKCompressor(0.10)
+        assert C.raw_nbytes(t) / comp.wire_nbytes(t) >= 5.0
+
+    def test_qsgd_formula(self):
+        t = {"x": jnp.zeros((1000,))}
+        comp = C.QSGDCompressor(4)
+        # 1000 × (4 magnitude bits + 1 sign) + 32-bit scale, rounded up
+        assert comp.wire_nbytes(t) == (1000 * 5 + 32 + 7) // 8
+
+    def test_works_on_shape_structs(self):
+        shapes = jax.eval_shape(lambda: _tree())
+        comp = C.TopKCompressor(0.10)
+        assert comp.wire_nbytes(shapes) == comp.wire_nbytes(_tree())
+
+    def test_uplink_nbytes_dispatches_on_config(self):
+        t = _tree()
+        assert C.uplink_nbytes(_fed(), t) == C.raw_nbytes(t)
+        assert C.uplink_nbytes(_fed(compressor="topk", topk_frac=0.1), t) \
+            < C.raw_nbytes(t) / 5
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            C.get_compressor(_fed(compressor="bogus"))
+        with pytest.raises(ValueError):
+            C.TopKCompressor(0.0)
+        with pytest.raises(ValueError):
+            C.QSGDCompressor(0)
+        assert C.get_compressor(_fed()) is None
+
+
+# ---------------------------------------------------------------------------
+# error feedback: the stored state IS the exact compression residual
+# ---------------------------------------------------------------------------
+class TestErrorFeedback:
+    def test_topk_residual_bitwise_exact(self):
+        delta, ef0 = _tree(1), T.zeros_like(_tree(1))
+        comp = C.TopKCompressor(0.10)
+        q, ef1 = comp.compress(delta, ef0, jax.random.PRNGKey(0))
+        # select is pure masking, so q + e == v holds bitwise
+        _assert_trees_equal(ef1, T.sub(delta, q), exact=True)
+
+    def test_qsgd_residual_exact_to_ulp(self):
+        delta, ef0 = _tree(2), T.zeros_like(_tree(2))
+        comp = C.QSGDCompressor(4)
+        q, ef1 = comp.compress(delta, ef0, jax.random.PRNGKey(0))
+        _assert_trees_equal(ef1, T.sub(delta, q), exact=False, atol=1e-6)
+
+    def test_ef_accumulates_across_calls(self):
+        delta, comp = _tree(3), C.TopKCompressor(0.10)
+        _, ef1 = comp.compress(delta, T.zeros_like(delta),
+                               jax.random.PRNGKey(0))
+        q2, ef2 = comp.compress(delta, ef1, jax.random.PRNGKey(1))
+        # round 2 quantises v = Δ + e₁ and keeps exactly v − q
+        _assert_trees_equal(ef2, T.sub(T.add(delta, ef1), q2), exact=True)
+
+    def test_ef_bounded_vs_no_feedback_bias(self):
+        """With EF the cumulative transported mass converges to the
+        cumulative delta (residual stays one round's worth); the residual
+        never grows unboundedly."""
+        delta, comp = _tree(4), C.TopKCompressor(0.25)
+        ef = T.zeros_like(delta)
+        sent = T.zeros_like(delta)
+        for i in range(30):
+            q, ef = comp.compress(delta, ef, jax.random.PRNGKey(i))
+            sent = T.add(sent, q)
+        # Σq = 30·Δ − e_final, so the relative shortfall is e/(30·Δ)
+        total = T.scale(delta, 30.0)
+        err = float(T.global_norm(T.sub(total, sent))
+                    / T.global_norm(total))
+        assert err < 0.1, f"EF failed to drain the residual (err={err:.3f})"
+
+    def test_engine_ef_state_is_round_residual(self, data):
+        """After round 1 (single client, FedAvg) the stored EF state equals
+        the raw delta minus the transported reconstruction, both recovered
+        from the two params trajectories."""
+        x, y, xt, yt, parts = data
+        kw = dict(strategy="fedavg", clients_per_round=1)
+        s_raw = FederatedSimulator(_fed(**kw), _sim(1), x, y, xt, yt, parts)
+        s_cmp = FederatedSimulator(
+            _fed(compressor="topk", topk_frac=0.1, **kw), _sim(1),
+            x, y, xt, yt, parts)
+        theta0 = s_raw.params
+        s_raw.run()
+        s_cmp.run()
+        assert len(s_cmp.ef_states) == 1        # exactly the picked client
+        (ef,) = s_cmp.ef_states.values()
+        # FedAvg, one client: θ' = θ − Δ, so Δ_raw − q = θ'_cmp − θ'_raw
+        expect = T.sub(s_cmp.params, s_raw.params)
+        _assert_trees_equal(ef, expect, exact=False, atol=1e-5)
+        # and the residual is genuinely nonzero (the compressor was lossy)
+        assert float(T.global_norm(ef)) > 0
+        del theta0
+
+    def test_engine_ef_disabled_not_stored(self, data):
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(
+            _fed(compressor="topk", topk_frac=0.1, error_feedback=False),
+            _sim(2), x, y, xt, yt, parts)
+        s.run()
+        assert s.ef_states == {} and not s.ef_enabled
+
+
+# ---------------------------------------------------------------------------
+# identity compressor: bit-identical to the uncompressed path, everywhere
+# ---------------------------------------------------------------------------
+class TestIdentityBitParity:
+    def test_simulator(self, data):
+        x, y, xt, yt, parts = data
+        a = FederatedSimulator(_fed(), _sim(), x, y, xt, yt, parts)
+        b = FederatedSimulator(_fed(compressor="identity"), _sim(),
+                               x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+        assert b.uplink_bytes == b.uplink_bytes_raw > 0
+
+    def test_async_engine(self, data):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        a = AsyncFederatedSimulator(_fed(), _sim(), het, x, y, xt, yt, parts)
+        b = AsyncFederatedSimulator(_fed(compressor="identity"), _sim(), het,
+                                    x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+
+    def test_pod_engine(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import init_state, make_train_step
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="float32")
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 2, 2, 2, 32))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        kw = dict(strategy="fedadc", clients_per_round=2, local_steps=2,
+                  eta=0.05)
+        with make_host_mesh():
+            state = init_state(jax.random.PRNGKey(0), mcfg,
+                               FedConfig(**kw), run)
+            sa, _ = make_train_step(mcfg, FedConfig(**kw), run)(state, batch)
+            sb, _ = make_train_step(
+                mcfg, FedConfig(compressor="identity", **kw), run)(
+                    state, batch)
+            _assert_trees_equal(sa["params"], sb["params"], exact=True)
+
+
+# ---------------------------------------------------------------------------
+# lossy engines end-to-end + validation
+# ---------------------------------------------------------------------------
+class TestLossyEngines:
+    def test_simulator_topk_bytes_and_run(self, data):
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(_fed(compressor="topk", topk_frac=0.1),
+                               _sim(2), x, y, xt, yt, parts)
+        h = s.run()
+        assert np.isfinite(h[-1]["loss"])
+        assert s.uplink_bytes_raw / s.uplink_bytes >= 5.0
+        assert len(s.ef_states) > 0
+
+    def test_async_qsgd_runs_with_staleness(self, data):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, speed_dist="bimodal",
+                           straggler_frac=0.3, straggler_slowdown=3.0)
+        s = AsyncFederatedSimulator(
+            _fed(compressor="qsgd", qsgd_bits=6, buffer_k=2), _sim(3), het,
+            x, y, xt, yt, parts)
+        h = s.run()
+        assert np.isfinite(h[-1]["loss"])
+        assert 0 < s.uplink_bytes < s.uplink_bytes_raw
+
+    def test_async_drop_restores_ef_mass(self, data):
+        """A dropped upload must not lose transported mass: the engine folds
+        the undelivered reconstruction back into the client's EF memory
+        (Σ arrived q + e = Σ Δ)."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, drop_prob=0.5, seed=3)
+        s = AsyncFederatedSimulator(
+            _fed(compressor="topk", topk_frac=0.1), _sim(3), het,
+            x, y, xt, yt, parts)
+        h = s.run()
+        kinds = [e[0] for e in s.event_log]
+        assert "drop" in kinds, "no drop occurred; raise drop_prob/seed"
+        assert np.isfinite(h[-1]["loss"])
+        dropped = {e[2] for e in s.event_log if e[0] == "drop"}
+        assert any(c in s.ef_states for c in dropped)
+
+    def test_scaffold_feddyn_reject_lossy(self, data):
+        x, y, xt, yt, parts = data
+        for strat in ("scaffold", "feddyn"):
+            with pytest.raises(ValueError, match="compressor"):
+                FederatedSimulator(
+                    _fed(strat, compressor="topk"), _sim(),
+                    x, y, xt, yt, parts)
+
+    def test_pod_rejects_lossy_with_ef(self):
+        from repro.launch.train import make_train_step
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        with pytest.raises(ValueError, match="error_feedback"):
+            make_train_step(mcfg, FedConfig(strategy="fedadc",
+                                            compressor="qsgd"),
+                            RunConfig())
+
+    def test_qsgd_unbiased_under_averaging(self):
+        """Stochastic rounding: the mean reconstruction over many draws
+        approaches the input (the property EF + momentum rely on)."""
+        v = {"x": jax.random.normal(jax.random.PRNGKey(0), (256,))}
+        comp = C.QSGDCompressor(3)
+        acc = T.zeros_like(v)
+        n = 64
+        for i in range(n):
+            q, _ = comp.compress(v, T.zeros_like(v), jax.random.PRNGKey(i))
+            acc = T.add(acc, q)
+        mean = T.scale(acc, 1.0 / n)
+        err = float(T.global_norm(T.sub(mean, v)) / T.global_norm(v))
+        assert err < 0.05, f"qsgd reconstruction biased (err={err:.3f})"

@@ -177,3 +177,65 @@ def test_property_kd_loss_hparams(lam, tau):
     expect = ref.kd_loss(s, t, y, rho, lam, tau)
     np.testing.assert_allclose(out, expect, atol=2e-5, rtol=1e-3)
     assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# delta-compression kernels (uplink quantise/sparsify round trips)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [128, 1000, 4097, 65536])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qsgd_kernel_sweep(n, bits, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    v = rand(ks[0], (n,), dtype)
+    u = jax.random.uniform(ks[1], (n,), dtype=dtype)
+    scale = jnp.max(jnp.abs(v))
+    s = (1 << bits) - 1
+    q, r = ops.qsgd_compress_leaf(v, u, scale, s)
+    qe, re = ref.qsgd_quantize(v, u, scale, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(q, np.float32),
+                               np.asarray(qe, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(re, np.float32), atol=tol, rtol=tol)
+    # reconstruction error bounded by one quantisation step (plus dtype
+    # rounding: bf16's 8-bit mantissa cannot represent 255 levels exactly)
+    step = float(scale) / s
+    eps = 2.0 ** -8 if dtype == jnp.bfloat16 else 2.0 ** -23
+    bound = step * (1 + 1e-3) + 2 * float(scale) * eps + 1e-6
+    np.testing.assert_array_less(np.abs(np.asarray(v - q, np.float32)), bound)
+
+
+def test_qsgd_kernel_zero_leaf_and_padding():
+    v = jnp.zeros((131,))                        # forces lane padding + scale 0
+    u = jax.random.uniform(jax.random.PRNGKey(0), (131,))
+    q, r = ops.qsgd_compress_leaf(v, u, jnp.max(jnp.abs(v)), 15)
+    np.testing.assert_array_equal(np.asarray(q), 0.0)
+    np.testing.assert_array_equal(np.asarray(r), 0.0)
+
+
+@pytest.mark.parametrize("n,k", [(128, 13), (1000, 100), (4097, 1),
+                                 (65536, 6554)])
+def test_topk_threshold_kernel_sweep(n, k):
+    v = rand(jax.random.PRNGKey(9), (n,), jnp.float32)
+    thresh = jax.lax.top_k(jnp.abs(v), k)[0][-1]
+    q, r = ops.topk_compress_leaf(v, thresh)
+    qe, re = ref.topk_threshold_select(v, thresh)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qe))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(re))
+    # exactly k survivors for distinct magnitudes, and r is the exact
+    # complement: q + r == v bitwise (select is pure masking)
+    assert int(jnp.sum(q != 0)) == k
+    np.testing.assert_array_equal(np.asarray(q + r), np.asarray(v))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 3000), frac=st.floats(0.01, 1.0))
+def test_property_topk_select_conserves(n, frac):
+    rng = np.random.RandomState(n)
+    v = jnp.asarray(rng.randn(n).astype(np.float32))
+    k = max(1, int(np.ceil(frac * n)))
+    thresh = jax.lax.top_k(jnp.abs(v), k)[0][-1]
+    q, r = ops.topk_compress_leaf(v, thresh)
+    np.testing.assert_array_equal(np.asarray(q + r), np.asarray(v))
+    assert int(jnp.sum(q != 0)) >= min(k, int(jnp.sum(v != 0)))

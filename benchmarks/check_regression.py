@@ -11,8 +11,14 @@ difference-of-large-numbers fields (e.g. an accuracy *gap* of 0.0017) must
 not be gated orders of magnitude tighter than the quantities they were
 computed from.
 
+``--require`` names dotted paths (e.g. ``headline.downlink_measured``,
+``async_cells``) that must exist and be truthy/non-empty in the FRESH
+output of every compared pair — the walk itself is committed-driven, so
+this is how the gate pins *new* sections a refactor promised (a fresh file
+that silently stopped emitting them would otherwise still pass).
+
 Usage:  python benchmarks/check_regression.py fresh.json:committed.json \\
-            [--tol 0.2] [--atol 0.01]
+            [--tol 0.2] [--atol 0.01] [--require path ...]
 Exit code 1 on any violation, with a per-path report.
 """
 from __future__ import annotations
@@ -63,14 +69,34 @@ def _walk(fresh, committed, path, tol, atol, errors):
             errors.append(f"{path}: {fresh!r} != committed {committed!r}")
 
 
+def _check_required(fresh, paths, errors):
+    for dotted in paths:
+        node = fresh
+        ok = True
+        for part in dotted.split("."):
+            if isinstance(node, dict) and part in node:
+                node = node[part]
+            else:
+                ok = False
+                break
+        if not ok:
+            errors.append(f"required path {dotted!r} missing from fresh "
+                          f"output")
+        elif isinstance(node, (list, dict)) and not node:
+            errors.append(f"required path {dotted!r} is empty")
+        elif node is False or node is None:
+            errors.append(f"required path {dotted!r} is {node!r}")
+
+
 def compare(fresh_path: str, committed_path: str, tol: float = 0.2,
-            atol: float = 0.01):
+            atol: float = 0.01, require=()):
     with open(fresh_path) as f:
         fresh = json.load(f)
     with open(committed_path) as f:
         committed = json.load(f)
     errors: list = []
     _walk(fresh, committed, "$", tol, atol, errors)
+    _check_required(fresh, require, errors)
     return errors
 
 
@@ -80,11 +106,15 @@ def main():
                     help="fresh.json:committed.json pairs")
     ap.add_argument("--tol", type=float, default=0.2)
     ap.add_argument("--atol", type=float, default=0.01)
+    ap.add_argument("--require", nargs="*", default=[],
+                    help="dotted paths that must exist (truthy/non-empty) "
+                         "in every fresh output")
     args = ap.parse_args()
     failed = False
     for pair in args.pairs:
         fresh, committed = pair.split(":")
-        errors = compare(fresh, committed, args.tol, args.atol)
+        errors = compare(fresh, committed, args.tol, args.atol,
+                         args.require)
         if errors:
             failed = True
             print(f"REGRESSION {fresh} vs {committed}:")

@@ -2,24 +2,33 @@
 the downlink additionally carries the momentum/model-difference broadcast
 (2× naive, 1× when Δ̄-broadcast overlaps compute as the paper proposes).
 
-Two tables per architecture, side by side:
+Two accountings per architecture, side by side:
 
-* **analytic** — the paper's own bytes/round accounting (n_params × dtype
-  bytes × clients), per strategy.
-* **measured** — what the compression subsystem would actually put on the
-  wire per client upload, from the real parameter pytree of the arch
-  (``jax.eval_shape``, no allocation) through each compressor's exact wire
-  format (repro.federated.compression.wire_nbytes).
+* **analytic** — the paper's own bytes/round table (n_params × dtype bytes
+  × clients), per strategy.
+* **measured** — what the transport layer actually puts on the wire, in
+  BOTH directions, from the real parameter pytree of the arch
+  (``jax.eval_shape``, no allocation):
 
-The measured column is what ``benchmarks/comm_sweep.py`` trades against
-accuracy; here it is reported against the analytic floor so the two
+  - uplink: each compressor codec's exact wire format
+    (``Transport.uplink_wire_nbytes``);
+  - downlink: the (θ_t, ctx) broadcast tree the strategy really ships —
+    FedADC's ctx carries m̄_t, so its measured naive downlink is 2× the
+    parameter bytes *by construction of the wire tree*, not by analytic
+    assumption — under the pluggable downlink codecs.
+
+The measured numbers are what ``benchmarks/comm_sweep.py`` trades against
+accuracy; here they are reported against the analytic floor so the two
 accountings can be compared at a glance.
 """
 import jax
 
 from benchmarks.common import emit
 from repro.configs import ARCHS
+from repro.configs.base import FedConfig
+from repro.core.strategies import get_strategy
 from repro.federated import compression as C
+from repro.federated.transport import Transport
 from repro.models.registry import get_model
 
 
@@ -45,11 +54,27 @@ def param_shapes(arch: str):
                           jax.random.PRNGKey(0))
 
 
-MEASURED = (
-    ("raw", None),
-    ("topk10", C.TopKCompressor(0.10)),
-    ("qsgd4", C.QSGDCompressor(4)),
-    ("qsgd8", C.QSGDCompressor(8)),
+def broadcast_template(strategy_name: str, shapes, fed: FedConfig):
+    """The (θ_t, ctx) downlink wire tree as ShapeDtypeStructs — ctx is what
+    ``strategy.client_setup`` really broadcasts (m̄_t for FedADC, θ_t for
+    FedProx, nothing for FedAvg)."""
+    s = get_strategy(strategy_name)
+    server = jax.eval_shape(s.server_init, shapes)
+    ctx = jax.eval_shape(lambda ss, p: s.client_setup(ss, p, fed),
+                         server, shapes)
+    return (shapes, ctx)
+
+
+UPLINK = (
+    ("raw", {}),
+    ("topk10", {"compressor": "topk", "topk_frac": 0.10}),
+    ("qsgd4", {"compressor": "qsgd", "qsgd_bits": 4}),
+    ("qsgd8", {"compressor": "qsgd", "qsgd_bits": 8}),
+)
+DOWNLINK = (
+    ("raw", {}),
+    ("topk10", {"downlink_compressor": "topk", "topk_frac": 0.10}),
+    ("qsgd8", {"downlink_compressor": "qsgd", "qsgd_bits": 8}),
 )
 
 
@@ -64,18 +89,29 @@ def main(rows=None):
                 f"comm.{arch}.{strat}", 0,
                 f"up_GB={t['up']/2**30:.2f};down_GB={t['down']/2**30:.2f};"
                 f"down_vs_fedavg={t['down']/base:.2f}x"))
-        # measured per-client upload bytes through the compression wire
-        # formats, against the analytic raw uplink as the reference
         shapes = param_shapes(arch)
         raw = C.raw_nbytes(shapes)
         analytic_up = n * 4
-        for name, comp in MEASURED:
-            b = raw if comp is None else comp.wire_nbytes(shapes)
+        # measured per-client uplink bytes through each codec's wire format
+        for name, kw in UPLINK:
+            b = Transport(FedConfig(**kw)).uplink_wire_nbytes(shapes)
             rows.append(emit(
-                f"comm.{arch}.measured.{name}", 0,
+                f"comm.{arch}.measured.up.{name}", 0,
                 f"up_GB_per_client={b/2**30:.3f};"
                 f"vs_analytic={b/analytic_up:.3f}x;"
                 f"vs_raw={raw/b:.2f}x_smaller"))
+        # measured per-client downlink bytes: the real (θ_t, ctx) broadcast
+        # tree per strategy × downlink codec — fedadc's naive 2× shows up
+        # because its wire tree carries m̄_t, not because we multiplied by 2
+        for strat in ("fedavg", "slowmo", "fedadc"):
+            for name, kw in DOWNLINK:
+                fed = FedConfig(strategy=strat, **kw)
+                tpl = broadcast_template(strat, shapes, fed)
+                b = Transport(fed).downlink_wire_nbytes(tpl)
+                rows.append(emit(
+                    f"comm.{arch}.measured.down.{strat}.{name}", 0,
+                    f"down_GB_per_client={b/2**30:.3f};"
+                    f"vs_raw_params={b/raw:.2f}x"))
     return rows
 
 

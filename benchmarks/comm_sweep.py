@@ -1,10 +1,17 @@
-"""Accuracy-vs-uplink-bytes frontier (the measured version of Sec. II-A).
+"""Accuracy-vs-bytes frontier (the measured version of Sec. II-A).
 
-Sweeps strategy × compressor on the synthetic non-IID benchmark (sorted
-2-class shards, the paper's hardest skew) and reports, per cell, the final
-accuracy together with the *measured* uplink bytes the compression wire
-formats actually transport — turning the paper's analytic comm-load table
-into an accuracy/bandwidth trade-off.
+Two sweeps on the synthetic non-IID benchmark (sorted 2-class shards, the
+paper's hardest skew):
+
+* **sync** — strategy × uplink codec on the synchronous simulator: final
+  accuracy against the *measured* bytes the transport wire formats actually
+  carry, in both directions (downlink is the real (θ_t, ctx) broadcast
+  tree, measured — not the analytic n·4·clients floor).
+* **async** — the ROADMAP-requested ``topk_frac``/``qsgd_bits`` ×
+  staleness axis on the semi-async engine: each compression knob runs under
+  a bimodal straggler fleet with buffered-K aggregation, with and without
+  staleness discounting, so the frontier shows how lossy uplinks compose
+  with stale pseudo-gradients (EF mass is conserved across drops).
 
 Headline check (asserted into the JSON, gated in CI): top-k 10% with error
 feedback stays within 2 accuracy points of the uncompressed FedADC run
@@ -20,7 +27,10 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks.common import dataset, emit, partitions, run_fl
+import numpy as np
+
+from benchmarks.common import (HeteroConfig, dataset, emit, partitions,
+                               run_fl, run_fl_async)
 
 STRATEGIES = ("fedavg", "slowmo", "fedadc")
 COMPRESSORS = (
@@ -31,6 +41,41 @@ COMPRESSORS = (
                   "error_feedback": True}),
 )
 
+# async axis: compression knobs × staleness handling, under stragglers
+ASYNC_KNOBS = (
+    ("topk5_ef", {"compressor": "topk", "topk_frac": 0.05,
+                  "error_feedback": True}),
+    ("topk20_ef", {"compressor": "topk", "topk_frac": 0.20,
+                   "error_feedback": True}),
+    ("qsgd2_ef", {"compressor": "qsgd", "qsgd_bits": 2,
+                  "error_feedback": True}),
+    ("qsgd8_ef", {"compressor": "qsgd", "qsgd_bits": 8,
+                  "error_feedback": True}),
+)
+ASYNC_STALENESS = (
+    ("stale_none", {"buffer_k": 2, "staleness_mode": "none"}),
+    ("stale_poly", {"buffer_k": 2, "staleness_mode": "poly",
+                    "staleness_factor": 0.5}),
+)
+ASYNC_HETERO = HeteroConfig(enabled=True, speed_dist="bimodal",
+                            straggler_frac=0.25, straggler_slowdown=4.0,
+                            seed=0)
+
+
+def _cell(name_kv, r):
+    s = r["sim"]
+    cell = dict(name_kv)
+    cell.update({
+        "acc": round(r["acc"], 4),
+        "uplink_bytes": int(s.uplink_bytes),
+        "uplink_bytes_raw": int(s.uplink_bytes_raw),
+        "downlink_bytes": int(s.downlink_bytes),
+        "downlink_bytes_raw": int(s.downlink_bytes_raw),
+        "bytes_reduction": round(s.uplink_bytes_raw / s.uplink_bytes, 2),
+        "us_per_round": r["us_per_round"],
+    })
+    return cell
+
 
 def sweep(rounds=90, n_clients=20, seed=0):
     data = dataset()
@@ -40,21 +85,29 @@ def sweep(rounds=90, n_clients=20, seed=0):
         for cname, extra in COMPRESSORS:
             r = run_fl(strat, parts, data, rounds=rounds,
                        n_clients=n_clients, seed=seed, extra_fed=extra)
-            s = r["sim"]
-            cells.append({
-                "strategy": strat,
-                "compressor": cname,
-                "acc": round(r["acc"], 4),
-                "uplink_bytes": int(s.uplink_bytes),
-                "uplink_bytes_raw": int(s.uplink_bytes_raw),
-                "bytes_reduction": round(
-                    s.uplink_bytes_raw / s.uplink_bytes, 2),
-                "us_per_round": r["us_per_round"],
-            })
+            cells.append(_cell({"strategy": strat, "compressor": cname}, r))
     return cells
 
 
-def main(rows=None, rounds=90, out_json="BENCH_comm.json"):
+def async_sweep(rounds=80, n_clients=20, seed=0):
+    data = dataset()
+    parts = partitions(data[1], n_clients, "sort", 2, seed=seed)
+    cells = []
+    for cname, comp in ASYNC_KNOBS:
+        for sname, stale in ASYNC_STALENESS:
+            extra = dict(comp)
+            extra.update(stale)
+            r = run_fl_async("fedadc", parts, data, hetero=ASYNC_HETERO,
+                             rounds=rounds, n_clients=n_clients, seed=seed,
+                             extra_fed=extra)
+            cell = _cell({"compressor": cname, "staleness": sname}, r)
+            cell["mean_staleness"] = round(
+                float(np.mean(r["sim"].staleness_seen)), 3)
+            cells.append(cell)
+    return cells
+
+
+def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
     rows = rows if rows is not None else []
     cells = sweep(rounds=rounds)
     by = {(c["strategy"], c["compressor"]): c for c in cells}
@@ -63,6 +116,15 @@ def main(rows=None, rounds=90, out_json="BENCH_comm.json"):
             f"comm_sweep.{c['strategy']}.{c['compressor']}",
             c["us_per_round"],
             f"acc={c['acc']};up_MB={c['uplink_bytes']/2**20:.2f};"
+            f"down_MB={c['downlink_bytes']/2**20:.2f};"
+            f"reduction={c['bytes_reduction']:.2f}x"))
+    async_cells = async_sweep(rounds=async_rounds)
+    for c in async_cells:
+        rows.append(emit(
+            f"comm_sweep.async.fedadc.{c['compressor']}.{c['staleness']}",
+            c["us_per_round"],
+            f"acc={c['acc']};up_MB={c['uplink_bytes']/2**20:.2f};"
+            f"stale={c['mean_staleness']:.2f};"
             f"reduction={c['bytes_reduction']:.2f}x"))
     base = by[("fedadc", "none")]
     topk = by[("fedadc", "topk10_ef")]
@@ -73,7 +135,9 @@ def main(rows=None, rounds=90, out_json="BENCH_comm.json"):
     report = {
         "benchmark": "synthetic non-IID (sorted 2-class shards)",
         "rounds": rounds,
+        "async_rounds": async_rounds,
         "cells": cells,
+        "async_cells": async_cells,
         "headline": {
             "fedadc_acc_uncompressed": base["acc"],
             "fedadc_acc_topk10_ef": topk["acc"],
@@ -81,6 +145,11 @@ def main(rows=None, rounds=90, out_json="BENCH_comm.json"):
             "bytes_reduction": reduction,
             "within_2pts": bool(acc_gap <= 0.02),
             "reduction_ge_5x": bool(reduction >= 5.0),
+            # measured (not analytic) downlink: FedADC's broadcast carries
+            # m̄_t, so its wire tree is 2× the parameter bytes
+            "fedadc_downlink_vs_uplink_raw": round(
+                base["downlink_bytes_raw"] / base["uplink_bytes_raw"], 2),
+            "downlink_measured": True,
         },
     }
     with open(out_json, "w") as f:
@@ -93,8 +162,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI: pin the committed-JSON configuration "
-                         "(90 rounds) regardless of --rounds")
+                         "(90 sync / 80 async rounds) regardless of --rounds")
     ap.add_argument("--rounds", type=int, default=90)
+    ap.add_argument("--async-rounds", type=int, default=80)
     ap.add_argument("--out", default="BENCH_comm.json")
     args = ap.parse_args()
-    main(rounds=90 if args.smoke else args.rounds, out_json=args.out)
+    main(rounds=90 if args.smoke else args.rounds,
+         async_rounds=80 if args.smoke else args.async_rounds,
+         out_json=args.out)

@@ -14,9 +14,10 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.configs.base import FedConfig
+from repro.configs.base import FedConfig, HeteroConfig
 from repro.data.partition import dirichlet_partition, sort_and_partition
 from repro.data.synthetic import make_image_dataset
+from repro.federated.async_engine import AsyncFederatedSimulator
 from repro.federated.simulator import FederatedSimulator, SimConfig
 
 _DATA_CACHE: Dict = {}
@@ -55,6 +56,29 @@ def run_fl(strategy, parts, data, *, rounds=60, n_clients=20,
                     rounds=rounds, eval_every=eval_every or rounds,
                     cnn_width=8, selector=selector, seed=seed)
     s = FederatedSimulator(fed, sim, x, y, xt, yt, parts)
+    t0 = time.time()
+    hist = s.run()
+    wall = time.time() - t0
+    return {"acc": hist[-1]["acc"], "loss": hist[-1]["loss"],
+            "us_per_round": wall / rounds * 1e6, "hist": hist, "sim": s}
+
+
+def run_fl_async(strategy, parts, data, *, hetero: HeteroConfig, rounds=60,
+                 n_clients=20, clients_per_round=4, local_steps=8, eta=0.02,
+                 beta=0.7, batch_size=32, n_classes=10, model="cnn", seed=0,
+                 extra_fed=None) -> Dict:
+    """run_fl's semi-async twin: the virtual-clock engine under a
+    heterogeneous fleet, with the same calibrated miniature."""
+    x, y, xt, yt = data
+    fed_kw = dict(strategy=strategy, local_steps=local_steps,
+                  clients_per_round=clients_per_round, n_clients=n_clients,
+                  eta=eta, beta_global=beta, beta_local=beta)
+    if extra_fed:
+        fed_kw.update(extra_fed)
+    fed = FedConfig(**fed_kw)
+    sim = SimConfig(model=model, n_classes=n_classes, batch_size=batch_size,
+                    rounds=rounds, eval_every=rounds, cnn_width=8, seed=seed)
+    s = AsyncFederatedSimulator(fed, sim, hetero, x, y, xt, yt, parts)
     t0 = time.time()
     hist = s.run()
     wall = time.time() - t0

@@ -232,13 +232,24 @@ class FedConfig:
                                    # clients_per_round (synchronous barrier)
     staleness_mode: str = "poly"   # none | poly ((1+s)^-a) | exp (a^s)
     staleness_factor: float = 0.5  # `a` in the discount above
-    # uplink delta compression (repro.federated.compression): none bypasses
-    # the hook entirely; identity goes through it losslessly (bit-identity
-    # tested); topk/qsgd are lossy with per-client error feedback
+    # uplink delta compression (repro.federated.compression, driven through
+    # repro.federated.transport.Transport): none bypasses the codec entirely;
+    # identity goes through it losslessly (bit-identity tested); topk/qsgd
+    # are lossy with per-client error feedback
     compressor: str = "none"       # none | identity | topk | qsgd
     topk_frac: float = 0.1         # fraction of entries kept per leaf
     qsgd_bits: int = 8             # magnitude bits (sign sent separately)
     error_feedback: bool = True    # re-inject round-t residual at t+1
+    # true sparse (value, index) top-k wire representation inside jit —
+    # the server decodes one scatter per client instead of re-running the
+    # dense threshold pass (DESIGN.md §Transport); reconstruction equals
+    # the dense path exactly (oracle-tested)
+    sparse_uplink: bool = False
+    # downlink broadcast compression (Transport.broadcast): the server
+    # compresses (θ_t, ctx) once per round, clients train on the wire
+    # reconstruction.  Stateless server-side (no EF: the broadcast has no
+    # per-client residual to carry).  none/identity are bit-exact.
+    downlink_compressor: str = "none"   # none | identity | topk | qsgd
 
 
 # ---------------------------------------------------------------------------

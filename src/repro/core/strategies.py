@@ -21,9 +21,16 @@ Strategies whose clients carry cross-round state (SCAFFOLD c_i, FedDyn h_i,
 MOON previous model) additionally implement client_state_* hooks used by the
 simulator; the pod engine restricts itself to stateless-client strategies
 (see DESIGN.md §Engines).
+
+The wire (uplink compression, downlink broadcast codecs, byte accounting)
+is NOT a strategy concern: engines compose a strategy with a Transport and
+a ClientStore through repro.federated.protocol.RoundProtocol (DESIGN.md
+§Transport).  The old ``compress_delta`` hook remains as a deprecation
+shim only.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -31,6 +38,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import FedConfig
 from repro.core import tree as T
+
+# hooks that have already fired their deprecation warning this process —
+# keyed by hook name so a shim warns once, not once per call site or (worse)
+# once per jit re-trace of the round function
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(hook: str, replacement: str) -> None:
+    if hook in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(hook)
+    warnings.warn(f"{hook} is deprecated; use {replacement} "
+                  f"(DESIGN.md §Transport migration table)",
+                  DeprecationWarning, stacklevel=3)
 
 
 def _maybe_clip(g, fed: FedConfig):
@@ -74,18 +95,16 @@ class FedAvg:
         return _sgd_step(theta, g, fed.eta, fed), extra, aux
 
     def compress_delta(self, delta, ef, key, fed):
-        """Client-side uplink hook (one client's delta, vmap-safe): lossy-
-        compress against the client's error-feedback memory and return the
-        *decompressed* delta (the server's wire reconstruction) plus the new
-        EF residual.  Every engine routes its uplink through this hook
-        *before* aggregation, so the server update — in particular the
-        FedADC momentum recursion — always consumes decompressed aggregates
-        (DESIGN.md §Compression).  No-op when fed.compressor == 'none'."""
-        from repro.federated.compression import get_compressor  # lazy: layering
-        comp = get_compressor(fed)
-        if comp is None:
-            return delta, ef
-        return comp.compress(delta, ef, key)
+        """DEPRECATED shim — the uplink hook moved off the strategy and into
+        the wire layer: use ``repro.federated.transport.Transport.uplink``
+        (engines drive it through ``RoundProtocol.uplink``).  Kept for one
+        release so external callers migrate gracefully; warns once per
+        process, then delegates to a cached stateless Transport with the
+        exact pre-redesign semantics."""
+        _warn_deprecated("strategy.compress_delta",
+                         "RoundProtocol.uplink / Transport.uplink")
+        from repro.federated.transport import shim_transport  # lazy: layering
+        return shim_transport(fed).uplink(delta, ef, key)
 
     def server_aggregate(self, deltas, weights, fed):
         """Δ̄ = Σ_i w_i·Δ_i / Σ_i w_i over client-stacked deltas.  Shared by

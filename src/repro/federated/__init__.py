@@ -1,14 +1,22 @@
-"""Federated engines and the heterogeneity subsystem.
+"""Federated engines and the unified round protocol.
 
+* ``protocol``     — ``RoundProtocol``: strategy + aggregator + transport +
+                     store composed once; every engine drives it.
+* ``transport``    — ``Transport``: bidirectional wire layer (downlink
+                     broadcast + uplink delta codecs, measured-byte
+                     accounting for both directions, sparse top-k path).
+* ``store``        — ``ClientStore``: per-client pytree store (host-backed
+                     for the simulator/async engines, functional
+                     ``sharded_*`` backend for the pod engine).
 * ``simulator``    — paper-scale synchronous round loop (CNN/ResNet).
 * ``async_engine`` — virtual-clock semi-async engine with staleness-corrected
                      FedADC (buffered-K aggregation).
 * ``hetero``       — client system model: speeds, availability, variable H_i.
 * ``aggregation``  — pluggable server aggregators (uniform/examples/DRAG).
-* ``compression``  — uplink delta compressors (identity/top-k/QSGD) with
-                     per-client error feedback.
+* ``compression``  — delta compressors (identity/top-k/QSGD) the transport
+                     codecs wrap, with per-client error feedback.
 
-See DESIGN.md §Engines, §Heterogeneity, and §Compression.
+See DESIGN.md §Engines, §Heterogeneity, §Compression, and §Transport.
 """
 from repro.federated.aggregation import compute_weights, weighted_mean
 from repro.federated.async_engine import AsyncFederatedSimulator
@@ -16,9 +24,13 @@ from repro.federated.compression import (get_compressor, raw_nbytes,
                                          uplink_nbytes)
 from repro.federated.hetero import (ClientSystemModel, fednova_scale,
                                     staleness_discount)
+from repro.federated.protocol import RoundProtocol
 from repro.federated.simulator import FederatedSimulator, SimConfig
+from repro.federated.store import ClientStore
+from repro.federated.transport import SparseLeaf, Transport, downlink_nbytes
 
 __all__ = ["FederatedSimulator", "SimConfig", "AsyncFederatedSimulator",
            "ClientSystemModel", "fednova_scale", "staleness_discount",
            "compute_weights", "weighted_mean", "get_compressor",
-           "raw_nbytes", "uplink_nbytes"]
+           "raw_nbytes", "uplink_nbytes", "downlink_nbytes",
+           "RoundProtocol", "Transport", "ClientStore", "SparseLeaf"]

@@ -42,6 +42,14 @@ def cosine_divergence(delta, ref):
 KNOWN_AGGREGATORS = ("uniform", "examples", "drag")
 
 
+def reference_direction(server_state):
+    """The DRAG reference direction: the server momentum when the strategy
+    keeps one (``None`` otherwise — ``drag_weights`` then falls back to the
+    round mean).  Shared by every RoundProtocol backend so the three engines
+    resolve the reference identically."""
+    return server_state.get("m") if server_state is not None else None
+
+
 def streaming_weight(delta, ref, name: str, lam: float):
     """Per-client scalar weight, computable without the other deltas
     (pod-engine streaming form).  `name` is static.

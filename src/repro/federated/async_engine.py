@@ -46,7 +46,6 @@ import numpy as np
 from repro.configs.base import FedConfig, HeteroConfig
 from repro.core import tree as T
 from repro.core.selection import SELECTORS
-from repro.federated import aggregation as A
 from repro.federated.hetero import ClientSystemModel, staleness_discount
 from repro.federated.simulator import FederatedSimulator, SimConfig
 
@@ -89,28 +88,29 @@ class AsyncFederatedSimulator(FederatedSimulator):
 
     # ------------------------------------------------------------------
     def _make_deltas_fn(self):
-        """(params, server_state, xb, yb, counts, cstates, efs, keys)
+        """(params, server_state, xb, yb, counts, cstates, efs, keys, gkey)
         -> (stacked uplink deltas, new EF states, losses) for one dispatch
         group — the same vmapped client_update the synchronous round uses,
-        minus the aggregation, plus the per-client compression hook (each
-        client compresses against its EF memory at dispatch; the server
-        later discounts/aggregates the decompressed reconstructions)."""
-        strategy = self.strategy
-        fed = self.fed
+        minus the aggregation, plus the protocol's wire round trips (the
+        dispatched clients train on the downlink broadcast reconstruction;
+        each uplinks against its EF memory at dispatch; the server later
+        discounts/aggregates the decoded reconstructions)."""
+        protocol = self.protocol
         client_update = self._make_client_update()
-        compressed = self.compressor is not None
+        transported = protocol.transport.up is not None
+        down = protocol.transport.down
+        lossy_down = down is not None and down.lossy
 
         def deltas_fn(params, server_state, xb, yb, counts, cstates, efs,
-                      keys):
-            ctx = strategy.client_setup(server_state, params, fed)
+                      keys, gkey):
+            dkey = jax.random.fold_in(gkey, 0xD0) if lossy_down else None
+            params_w, ctx = protocol.client_ctx(server_state, params, dkey)
             deltas, _, losses, _ = jax.vmap(
-                lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
+                lambda x, y, c, cs: client_update(params_w, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
             new_efs = efs
-            if compressed:
-                deltas, new_efs = jax.vmap(
-                    lambda d, e, k: strategy.compress_delta(d, e, k, fed)
-                )(deltas, efs, keys)
+            if transported:
+                deltas, new_efs = jax.vmap(protocol.uplink)(deltas, efs, keys)
             return deltas, new_efs, losses
 
         return deltas_fn
@@ -119,18 +119,16 @@ class AsyncFederatedSimulator(FederatedSimulator):
         """(params, server_state, stacked deltas, n_examples, scales)
         -> (params', server_state').  `scales` folds the per-delta staleness
         discount and FedNova normalisation into one multiplier."""
-        strategy, fed = self.strategy, self.fed
+        protocol = self.protocol
 
         def apply_fn(params, server_state, deltas, n_examples, scales):
             scaled = jax.tree.map(
                 lambda d: d * scales.reshape((-1,) + (1,) * (d.ndim - 1)
                                              ).astype(d.dtype), deltas)
-            weights = A.compute_weights(
-                fed.aggregator, scaled, n_examples=n_examples,
-                ref=server_state.get("m"), lam=fed.drag_lambda)
-            mean_delta = strategy.server_aggregate(scaled, weights, fed)
-            return strategy.server_update(server_state, params, mean_delta,
-                                          fed)
+            weights = protocol.weights(scaled, n_examples=n_examples,
+                                       server_state=server_state)
+            mean_delta = protocol.aggregate(scaled, weights)
+            return protocol.server_update(server_state, params, mean_delta)
 
         return apply_fn
 
@@ -173,15 +171,17 @@ class AsyncFederatedSimulator(FederatedSimulator):
             counts = jnp.asarray(self.counts[np.asarray(group)])
             cstates = self._get_client_states(group)
             efs = self._get_ef_states(group)
-            keys = jax.random.split(
-                jax.random.fold_in(self._comp_key, self._dispatch_ctr),
-                len(group))
+            gkey = jax.random.fold_in(self._comp_key, self._dispatch_ctr)
+            keys = jax.random.split(gkey, len(group))
             self._dispatch_ctr += 1
             deltas, new_efs, losses = self._deltas_fn(
                 self.params, self.server_state, xb, yb, counts, cstates,
-                efs, keys)
+                efs, keys, gkey)
             if self.ef_enabled:
                 self._put_ef_states(group, new_efs)
+            # every dispatched client receives the (θ_t, ctx) broadcast —
+            # downlink bytes are paid at dispatch, uplink on arrival
+            self.transport.account_downlink(len(group))
             for j, c in enumerate(group):
                 rec = _InFlight(
                     client=c, version=self.version,
@@ -244,8 +244,7 @@ class AsyncFederatedSimulator(FederatedSimulator):
             self.event_log.append(("arrive", self.vtime, rec.client,
                                    rec.version))
             # a successful upload — dropped clients never transmit
-            self.uplink_bytes += self._client_uplink_nbytes
-            self.uplink_bytes_raw += self._client_uplink_raw
+            self.transport.account_uplink(1)
             buffer.append(rec)
             if len(buffer) >= K:
                 loss = self._flush(buffer)

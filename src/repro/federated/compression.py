@@ -23,14 +23,20 @@ Compressors (``FedConfig.compressor``):
 Error feedback (``FedConfig.error_feedback``): the client quantises
 ``v_t = Δ_t + e_{t-1}`` and keeps ``e_t = v_t − q(v_t)`` — the *exact*
 compression residual — to re-inject next round, so systematic quantisation
-bias cannot accumulate in the server trajectory.  The per-client ``e`` state
-rides the same host-side stateful-client plumbing the simulator already uses
-for SCAFFOLD/FedDyn state; engines without that plumbing (the pod engine)
-reject lossy compression with ``error_feedback=True``.
+bias cannot accumulate in the server trajectory.  The per-client ``e``
+state lives in the round protocol's ``ClientStore`` (DESIGN.md
+§Transport): host-backed in the simulator/async engines, mesh-sharded
+inside the pod engine's train state.
 
+These compressors are the *codecs'* arithmetic: engines drive them through
+``repro.federated.transport.Transport`` (uplink round trips, downlink
+broadcast, measured-byte accounting for both directions; the old
+``strategy.compress_delta`` hook survives as a deprecation shim).
 ``compress`` is jit/vmap-friendly: it returns the decompressed delta (what
-the server reconstructs from the wire) plus the new EF state; the actual
-wire format never materialises inside the round.  ``wire_nbytes`` is the
+the server reconstructs from the wire) plus the new EF state; the dense
+codecs never materialise the wire format inside the round, while
+``FedConfig.sparse_uplink`` swaps in the true (value, index)
+representation (transport.SparseTopKCodec).  ``wire_nbytes`` is the
 host-side accounting of that wire format — exact byte counts from leaf
 shapes (works on ShapeDtypeStructs, so pod-scale archs need no allocation).
 With ``fed.use_pallas`` the quantise-dequant round trips run as fused
@@ -114,17 +120,21 @@ class TopKCompressor(Compressor):
 
     def compress(self, delta, ef, key):
         v = T.add(delta, ef)
-
-        def leaf(x):
+        # flatten/unflatten rather than unzipping an is_leaf-on-tuples map:
+        # the input pytree may contain tuple internal nodes a tuple
+        # heuristic would mistake for (q, residual) pairs
+        leaves, treedef = jax.tree.flatten(v)
+        pairs = []
+        for x in leaves:
             flat = jnp.abs(x.reshape(-1))
             thresh = jax.lax.top_k(flat, self._k(flat.size))[0][-1]
             if self.use_pallas:
                 from repro.kernels import ops
-                return ops.topk_compress_leaf(x, thresh)
-            return ref.topk_threshold_select(x, thresh)
-
-        pairs = jax.tree.map(leaf, v)
-        return _unzip(pairs)
+                pairs.append(ops.topk_compress_leaf(x, thresh))
+            else:
+                pairs.append(ref.topk_threshold_select(x, thresh))
+        return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+                jax.tree.unflatten(treedef, [p[1] for p in pairs]))
 
     def wire_nbytes(self, tree) -> int:
         bits = 0
@@ -166,13 +176,6 @@ class QSGDCompressor(Compressor):
         bits = sum(_leaf_elems(l) * (self.bits + 1) + 32
                    for l in jax.tree.leaves(tree))
         return (bits + 7) // 8
-
-
-def _unzip(pairs):
-    """Pytree of (q, r) tuples -> (q tree, r tree)."""
-    is_pair = lambda x: isinstance(x, tuple)
-    return (jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair),
-            jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair))
 
 
 @functools.lru_cache(maxsize=None)

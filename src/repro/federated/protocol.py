@@ -1,0 +1,99 @@
+"""The unified round protocol: strategy + aggregator + transport + store
+(DESIGN.md §Transport).
+
+Every engine runs the same abstract round:
+
+    1. broadcast   — θ_t and the strategy's client context go down the wire
+                     (``RoundProtocol.client_ctx`` → ``Transport.broadcast``)
+    2. local work  — clients run H local steps (engine-specific execution:
+                     vmapped in the simulator, event-driven dispatch groups
+                     in the async engine, client-serial × pod-parallel scan
+                     in the pod engine)
+    3. uplink      — each delta rides ``RoundProtocol.uplink`` against the
+                     client's EF residual from the ``ClientStore``
+    4. aggregate   — pluggable weights + ``strategy.server_aggregate``
+    5. server step — the strategy's momentum/update recursion
+
+``RoundProtocol`` is deliberately thin: it owns the *composition* (which
+codec, which store namespaces, which aggregator reference) and the
+cross-cutting validation, while the engines keep their execution schedule.
+Three divergent round loops become one protocol with three execution
+backends.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.strategies import get_strategy
+from repro.federated import aggregation as A
+from repro.federated.store import ClientStore
+from repro.federated.transport import Transport
+
+# strategies whose server corrections are rebuilt from auxiliary uplink
+# state (SCAFFOLD c_i deltas, FedDyn raw drift sums) the wire codecs do not
+# model — a lossy delta would silently break those invariants, and their
+# corrections are *uniform* means, so non-uniform weights would bias them
+STATEFUL_SERVER_CORRECTION = ("scaffold", "feddyn")
+
+
+class RoundProtocol:
+    """One federated round's pluggable pieces, composed once per engine."""
+
+    def __init__(self, fed, strategy=None, store: Optional[ClientStore] = None,
+                 transport: Optional[Transport] = None):
+        self.fed = fed
+        self.strategy = strategy if strategy is not None \
+            else get_strategy(fed.strategy)
+        self.transport = transport if transport is not None else Transport(fed)
+        self.store = store if store is not None else ClientStore()
+        if fed.strategy in STATEFUL_SERVER_CORRECTION:
+            if fed.aggregator != "uniform":
+                raise ValueError(
+                    f"aggregator={fed.aggregator!r} is not supported with "
+                    f"{fed.strategy!r}; use aggregator='uniform'")
+            if self.transport.up is not None and self.transport.up.lossy:
+                raise ValueError(
+                    f"compressor={fed.compressor!r} is not supported with "
+                    f"{fed.strategy!r}; use compressor='none'")
+            if self.transport.down is not None and self.transport.down.lossy:
+                raise ValueError(
+                    f"downlink_compressor={fed.downlink_compressor!r} is not "
+                    f"supported with {fed.strategy!r}: the broadcast carries "
+                    f"its server correction")
+        self.ef_enabled = self.transport.ef_enabled
+
+    # --- store wiring ---------------------------------------------------
+    def register_client_state(self, init_fn: Callable) -> None:
+        self.store.register("state", init_fn)
+
+    def register_ef(self, init_fn: Callable) -> None:
+        self.store.register("ef", init_fn)
+
+    # --- jit-side protocol steps ----------------------------------------
+    def client_ctx(self, server_state, params, key=None):
+        """Step 1: build the strategy's client context and push (θ_t, ctx)
+        through the downlink codec.  -> (params', ctx') as received."""
+        ctx = self.strategy.client_setup(server_state, params, self.fed)
+        return self.transport.broadcast(params, ctx, key)
+
+    def uplink(self, delta, ef, key):
+        """Step 3: one client's wire round trip (vmap over clients)."""
+        return self.transport.uplink(delta, ef, key)
+
+    def weights(self, deltas, n_examples=None, server_state=None):
+        """Step 4a: aggregation weights from the pluggable aggregator; the
+        DRAG reference is the server momentum when the strategy keeps one."""
+        ref = A.reference_direction(server_state)
+        return A.compute_weights(self.fed.aggregator, deltas,
+                                 n_examples=n_examples, ref=ref,
+                                 lam=self.fed.drag_lambda)
+
+    def aggregate(self, deltas, weights):
+        """Step 4b: Δ̄ through the strategy's shared reduction."""
+        return self.strategy.server_aggregate(deltas, weights, self.fed)
+
+    def server_update(self, server_state, params, mean_delta):
+        """Step 5 (common path; SCAFFOLD/FedDyn keep their dedicated server
+        hooks in the simulator)."""
+        return self.strategy.server_update(server_state, params, mean_delta,
+                                           self.fed)

@@ -3,10 +3,13 @@
 Reproduces the paper's experimental setup: N clients with non-iid partitions
 (sort-and-partition or Dirichlet), cN sampled per round, H local SGD steps,
 then the strategy's server update.  Selected clients are vmapped into a
-single jit call per round.  Stateful-client strategies (SCAFFOLD, FedDyn,
-MOON) keep their per-client state in a host-side numpy store; the uplink
-compression error-feedback residuals (DESIGN.md §Compression) ride a second
-store through the same gather/scatter plumbing.
+single jit call per round.  The engine drives the unified round protocol
+(DESIGN.md §Transport): per-client cross-round state — SCAFFOLD/FedDyn
+control variates, MOON previous models, and the uplink error-feedback
+residuals — lives in the protocol's ``ClientStore`` (gathered for the
+round's picks, updated inside jit, scattered back), and both wire
+directions (downlink broadcast, uplink delta) go through the protocol's
+``Transport`` with measured-byte accounting.
 
 This engine runs the paper's CNN / ResNet-18 experiments; the pod-scale
 engine in ``repro.launch.train`` runs the assigned big architectures.
@@ -27,8 +30,7 @@ from repro.core import tree as T
 from repro.core.selection import SELECTORS
 from repro.core.strategies import get_strategy
 from repro.data.partition import class_counts
-from repro.federated import aggregation as A
-from repro.federated import compression as C
+from repro.federated.protocol import RoundProtocol
 from repro.models.vision import VISION_MODELS
 
 
@@ -73,42 +75,59 @@ class FederatedSimulator:
             init = functools.partial(init, n_classes=sim.n_classes)
         self.apply, self.features = apply, features
         self.params = init(jax.random.PRNGKey(sim.seed))
-        if fed.aggregator != "uniform" and fed.strategy in ("scaffold",
-                                                            "feddyn"):
-            # their server corrections (control variates c / drift h) are
-            # derived as *uniform* means; weighting only the deltas would
-            # silently bias the variance-reduction invariants
-            raise ValueError(
-                f"aggregator={fed.aggregator!r} is not supported with "
-                f"{fed.strategy!r}; use aggregator='uniform'")
         self.strategy = get_strategy(fed.strategy)
+        # the unified round protocol: transport (both wire directions) +
+        # sharded client store + aggregator, with cross-cutting validation
+        # (lossy/weighted aggregation × SCAFFOLD/FedDyn rejections)
+        self.protocol = RoundProtocol(fed, strategy=self.strategy)
+        self.transport = self.protocol.transport
         self.server_state = self.strategy.server_init(self.params)
         self.needs_teacher = fed.distill or fed.strategy in ("fedgkd", "fedntd")
         self.stateful = not getattr(self.strategy, "stateless_clients", True) \
             or fed.strategy == "moon"
-        self.client_states: Dict[int, object] = {}
-        self.compressor = C.get_compressor(fed)
-        if self.compressor is not None and self.compressor.lossy \
-                and fed.strategy in ("scaffold", "feddyn"):
-            # their server corrections are rebuilt from auxiliary uplink
-            # state (c_i deltas / raw drift sums) the compressors do not
-            # model; a lossy delta would silently break those invariants
-            raise ValueError(
-                f"compressor={fed.compressor!r} is not supported with "
-                f"{fed.strategy!r}; use compressor='none'")
-        # EF residuals ride the same host-side per-client store mechanics as
-        # the SCAFFOLD/FedDyn client state (a second store, same plumbing)
-        self.ef_enabled = (self.compressor is not None
-                          and self.compressor.lossy and fed.error_feedback)
-        self.ef_states: Dict[int, object] = {}
+        self.protocol.register_client_state(self._client_state_init)
+        self.ef_enabled = self.protocol.ef_enabled
+        self.protocol.register_ef(self._ef_init)
         self._comp_key = jax.random.PRNGKey(sim.seed ^ 0x5F5E1)
-        self._client_uplink_nbytes = C.uplink_nbytes(fed, self.params)
-        self._client_uplink_raw = C.raw_nbytes(self.params)
-        self.uplink_bytes = 0          # measured (post-compression) total
-        self.uplink_bytes_raw = 0      # uncompressed baseline total
+        # wire accounting templates: uplink = the delta tree, downlink =
+        # (θ_t, client ctx) — ctx shapes via eval_shape, no allocation
+        ctx_t = jax.eval_shape(
+            lambda ss, p: self.strategy.client_setup(ss, p, fed),
+            self.server_state, self.params)
+        self.transport.set_wire_templates(self.params, (self.params, ctx_t))
         self._round_fn = jax.jit(self._make_round_fn())
         self._eval_fn = jax.jit(self._make_eval_fn())
         self.history: List[Dict] = []
+
+    # --- store/transport views (the pre-protocol public surface) ----------
+    @property
+    def client_states(self) -> Dict[int, object]:
+        return self.protocol.store.states("state")
+
+    @property
+    def ef_states(self) -> Dict[int, object]:
+        return self.protocol.store.states("ef")
+
+    @property
+    def uplink_bytes(self) -> int:
+        return self.transport.uplink_bytes
+
+    @property
+    def uplink_bytes_raw(self) -> int:
+        return self.transport.uplink_bytes_raw
+
+    @property
+    def downlink_bytes(self) -> int:
+        return self.transport.downlink_bytes
+
+    @property
+    def downlink_bytes_raw(self) -> int:
+        return self.transport.downlink_bytes_raw
+
+    @property
+    def _lossy_uplink(self) -> bool:
+        up = self.transport.up
+        return up is not None and up.lossy
 
     # ------------------------------------------------------------------
     def _client_state_init(self):
@@ -119,38 +138,23 @@ class FederatedSimulator:
             return s.client_state_init(self.params)
         return {"_": jnp.zeros(())}
 
-    def _gather_states(self, store, picks, init_fn):
-        # `is None`, not truthiness: a stored state whose pytree happens to
-        # be falsy (e.g. a zero scalar) must not be silently re-initialised
-        states = []
-        for c in picks:
-            s = store.get(int(c))
-            states.append(init_fn() if s is None else s)
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
-
-    @staticmethod
-    def _scatter_states(store, picks, stacked):
-        for j, c in enumerate(picks):
-            store[int(c)] = jax.tree.map(lambda x: x[j], stacked)
-
     def _get_client_states(self, picks):
-        return self._gather_states(self.client_states, picks,
-                                   self._client_state_init)
+        return self.protocol.store.gather("state", picks)
 
     def _put_client_states(self, picks, stacked):
-        self._scatter_states(self.client_states, picks, stacked)
+        self.protocol.store.scatter("state", picks, stacked)
 
-    # --- error-feedback store (same plumbing, keyed by client id) --------
+    # --- error-feedback namespace (same store, second collection) --------
     def _ef_init(self):
-        if self.compressor is not None and self.compressor.lossy:
+        if self._lossy_uplink:
             return T.zeros_like(self.params)
-        return {"_": jnp.zeros(())}    # hook bypassed / lossless passthrough
+        return {"_": jnp.zeros(())}    # codec bypassed / lossless passthrough
 
     def _get_ef_states(self, picks):
-        return self._gather_states(self.ef_states, picks, self._ef_init)
+        return self.protocol.store.gather("ef", picks)
 
     def _put_ef_states(self, picks, stacked):
-        self._scatter_states(self.ef_states, picks, stacked)
+        self.protocol.store.scatter("ef", picks, stacked)
 
     # ------------------------------------------------------------------
     def _local_loss(self, theta, xb, yb, theta_t, counts, cstate):
@@ -231,29 +235,32 @@ class FederatedSimulator:
 
     def _make_round_fn(self):
         strategy, fed = self.strategy, self.fed
+        protocol = self.protocol
         client_update = self._make_client_update()
-        compressed = self.compressor is not None
+        transported = protocol.transport.up is not None
+        down = protocol.transport.down
+        lossy_down = down is not None and down.lossy
 
         def round_fn(params, server_state, xb, yb, counts, cstates,
                      n_examples, efs, key):
-            ctx = strategy.client_setup(server_state, params, fed)
+            # downlink: clients train on the broadcast wire reconstruction
+            # (bit-identical passthrough for none/identity codecs)
+            dkey = jax.random.fold_in(key, 0xD0) if lossy_down else None
+            params_w, ctx = protocol.client_ctx(server_state, params, dkey)
             deltas, ncs, losses, theta_Hs = jax.vmap(
-                lambda x, y, c, cs: client_update(params, ctx, x, y, c, cs)
+                lambda x, y, c, cs: client_update(params_w, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
-            if compressed:
+            if transported:
                 # uplink: each client ships q(Δ + e); the server aggregates
-                # the decompressed reconstructions below, so the momentum
+                # the decoded reconstructions below, so the momentum
                 # recursion in server_update composes with the lossy wire
                 keys = jax.random.split(key, xb.shape[0])
-                deltas, new_efs = jax.vmap(
-                    lambda d, e, k: strategy.compress_delta(d, e, k, fed)
-                )(deltas, efs, keys)
+                deltas, new_efs = jax.vmap(protocol.uplink)(deltas, efs, keys)
             else:
                 new_efs = efs
-            weights = A.compute_weights(
-                fed.aggregator, deltas, n_examples=n_examples,
-                ref=server_state.get("m"), lam=fed.drag_lambda)
-            mean_delta = strategy.server_aggregate(deltas, weights, fed)
+            weights = protocol.weights(deltas, n_examples=n_examples,
+                                       server_state=server_state)
+            mean_delta = protocol.aggregate(deltas, weights)
             if fed.strategy == "feddyn":
                 mean_theta_H = jax.tree.map(lambda d: jnp.mean(d, 0), theta_Hs)
                 sum_drift = jax.tree.map(
@@ -267,8 +274,8 @@ class FederatedSimulator:
                 new_params, new_ss = strategy.server_update_scaffold(
                     server_state, params, mean_delta, mean_dc, fed, part_frac)
             else:
-                new_params, new_ss = strategy.server_update(
-                    server_state, params, mean_delta, fed)
+                new_params, new_ss = protocol.server_update(
+                    server_state, params, mean_delta)
             return new_params, new_ss, ncs, new_efs, jnp.mean(losses)
 
         return round_fn
@@ -323,8 +330,8 @@ class FederatedSimulator:
                 self._put_client_states(picks, ncs)
             if self.ef_enabled:
                 self._put_ef_states(picks, nefs)
-            self.uplink_bytes += len(picks) * self._client_uplink_nbytes
-            self.uplink_bytes_raw += len(picks) * self._client_uplink_raw
+            self.transport.account_downlink(len(picks))
+            self.transport.account_uplink(len(picks))
             if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()
                 self.history.append({"round": t + 1, "acc": acc,

@@ -1,0 +1,286 @@
+"""First-class bidirectional wire layer for the federated round
+(DESIGN.md §Transport).
+
+The round protocol used to hand-wire compression per engine through the
+``strategy.compress_delta`` hook (uplink only, dense reconstruction only,
+analytic downlink accounting).  ``Transport`` owns both directions of the
+wire instead, and every engine drives it identically:
+
+* **downlink** — ``broadcast(params, ctx, key)``: the server compresses the
+  per-round broadcast (θ_t plus the strategy's client context, e.g. the
+  FedADC m̄_t) once, and clients train on the wire reconstruction.  The
+  downlink codec is stateless server-side (a broadcast has no per-client
+  residual to carry).  ``none``/``identity`` are bit-exact passthroughs.
+* **uplink** — ``uplink(delta, ef, key)``: one client's delta is encoded
+  against its error-feedback memory, transported, and decoded; the server
+  only ever aggregates wire reconstructions, so the FedADC momentum
+  recursion stays consistent with what a bandwidth-constrained deployment
+  can compute (DESIGN.md §Compression).
+* **accounting** — measured (wire-format) and raw byte counters for BOTH
+  directions, unified here instead of per-engine ad-hoc sums.  Wire sizes
+  come from the exact formats in ``repro.federated.compression`` and work
+  on ``ShapeDtypeStruct`` templates (no allocation).
+
+Codecs wrap the compressors in ``repro.federated.compression``:
+``identity`` (lossless), ``topk``/``qsgd`` dense round trips, and — new —
+a **true sparse top-k** path (``FedConfig.sparse_uplink``): inside jit the
+wire is per-leaf ``(values, indices)`` pairs (``SparseLeaf``); the server
+decodes with one scatter per client instead of re-running a dense
+threshold pass, so the wire representation the byte accounting always
+assumed now exists as an actual program object.  The sparse reconstruction
+equals the dense path exactly (oracle-tested).
+
+Engines construct their own ``Transport`` (counters are per-engine); the
+deprecated ``strategy.compress_delta`` shim goes through a cached
+stateless instance.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as T
+from repro.federated import compression as C
+
+
+class SparseLeaf(NamedTuple):
+    """One leaf's sparse wire format: the k surviving (value, index) pairs.
+    A NamedTuple, so it is a pytree — it vmaps over clients and crosses jit
+    boundaries like any other array pair."""
+    values: jax.Array     # (k,)
+    indices: jax.Array    # (k,) int32, flat index into the leaf
+
+
+def _is_sparse(x) -> bool:
+    return isinstance(x, SparseLeaf)
+
+
+# ---------------------------------------------------------------------------
+# codecs — one direction of the wire each
+# ---------------------------------------------------------------------------
+class Codec:
+    """encode/decode run inside jit (per client, vmap-safe); wire_nbytes is
+    host-side accounting of the same format."""
+    name = "base"
+    lossy = True
+
+    def encode(self, tree, ef, key):
+        """(pytree, EF pytree, key) -> (wire, new EF = exact residual)."""
+        raise NotImplementedError
+
+    def decode(self, wire, like):
+        """Wire -> dense pytree shaped like `like` (the server's view)."""
+        raise NotImplementedError
+
+    def roundtrip(self, tree, ef, key):
+        """encode ∘ decode fused: -> (dense reconstruction, new EF)."""
+        wire, new_ef = self.encode(tree, ef, key)
+        return self.decode(wire, tree), new_ef
+
+    def wire_nbytes(self, template) -> int:
+        raise NotImplementedError
+
+
+class IdentityCodec(Codec):
+    name = "identity"
+    lossy = False
+
+    def encode(self, tree, ef, key):
+        # pure passthrough — no arithmetic, so engine trajectories are
+        # bit-identical to transport-off runs (tested)
+        return tree, ef
+
+    def decode(self, wire, like):
+        return wire
+
+    def wire_nbytes(self, template) -> int:
+        return C.raw_nbytes(template)
+
+
+class DenseCodec(Codec):
+    """Lossy compressor whose in-program wire is the dense reconstruction
+    (the pre-redesign representation: real bytes live only in the
+    accounting).  Wraps topk/qsgd from repro.federated.compression."""
+
+    def __init__(self, comp: C.Compressor):
+        self._comp = comp
+        self.name = comp.name
+        self.lossy = comp.lossy
+
+    def encode(self, tree, ef, key):
+        return self._comp.compress(tree, ef, key)
+
+    def decode(self, wire, like):
+        return wire
+
+    def wire_nbytes(self, template) -> int:
+        return self._comp.wire_nbytes(template)
+
+
+class SparseTopKCodec(Codec):
+    """Top-k magnitude sparsification whose in-program wire IS the sparse
+    (value, index) format: per leaf, ``lax.top_k`` selects the k = ⌈frac·n⌉
+    largest-|v| entries of v = Δ + e, the residual zeroes exactly those
+    indices, and the server scatters the pairs back into a dense zero
+    tensor.  Reconstruction and residual match the dense threshold path
+    exactly away from magnitude ties (on a tie the dense path keeps every
+    entry ≥ τ while top-k keeps exactly k)."""
+    name = "topk"
+    lossy = True
+
+    def __init__(self, frac: float):
+        # reuse the dense compressor's validation + wire accounting
+        self._acct = C.TopKCompressor(frac)
+        self.frac = frac
+
+    def encode(self, tree, ef, key):
+        from repro.kernels import ops
+        v = T.add(tree, ef)
+        # flatten/unflatten rather than an is_leaf-on-tuples tree.map: the
+        # input pytree may itself contain tuple internal nodes, which an
+        # isinstance(tuple) heuristic would mistake for (wire, ef) pairs
+        leaves, treedef = jax.tree.flatten(v)
+        wire_leaves, ef_leaves = [], []
+        for x in leaves:
+            values, indices, residual = ops.topk_sparse_leaf(
+                x, self._acct._k(x.size))
+            wire_leaves.append(SparseLeaf(values, indices))
+            ef_leaves.append(residual)
+        return (jax.tree.unflatten(treedef, wire_leaves),
+                jax.tree.unflatten(treedef, ef_leaves))
+
+    def decode(self, wire, like):
+        from repro.kernels import ops
+        return jax.tree.map(
+            lambda w, l: ops.sparse_scatter_leaf(w.values, w.indices,
+                                                 l.shape, l.dtype),
+            wire, like, is_leaf=_is_sparse)
+
+    def wire_nbytes(self, template) -> int:
+        return self._acct.wire_nbytes(template)
+
+
+def make_codec(name: str, fed, direction: str = "uplink") -> Optional[Codec]:
+    """Codec for one wire direction (None = bypass, the pre-transport code
+    path with zero added arithmetic)."""
+    if name == "none":
+        return None
+    if name == "identity":
+        return IdentityCodec()
+    if name == "topk":
+        if direction == "uplink" and fed.sparse_uplink:
+            return SparseTopKCodec(fed.topk_frac)
+        return DenseCodec(C.TopKCompressor(fed.topk_frac, fed.use_pallas))
+    if name == "qsgd":
+        return DenseCodec(C.QSGDCompressor(fed.qsgd_bits, fed.use_pallas))
+    raise ValueError(f"unknown {direction} compressor {name!r}; "
+                     f"known: {', '.join(C.KNOWN_COMPRESSORS)}")
+
+
+# ---------------------------------------------------------------------------
+# the transport
+# ---------------------------------------------------------------------------
+class Transport:
+    """Bidirectional wire layer: downlink broadcast codec, uplink delta
+    codec, and measured-byte accounting for both directions.
+
+    jit-side methods (`broadcast`, `uplink`, `uplink_encode`,
+    `uplink_decode`) are pure; the byte counters are host-side and advance
+    through `account_uplink` / `account_downlink` once per transported
+    client.  Engines own their instance — counters are engine-local."""
+
+    def __init__(self, fed):
+        if fed.sparse_uplink and fed.compressor not in ("topk", "none"):
+            raise ValueError(
+                f"sparse_uplink is the (value, index) top-k wire format; "
+                f"compressor={fed.compressor!r} has no sparse path")
+        self.fed = fed
+        self.up = make_codec(fed.compressor, fed, "uplink")
+        self.down = make_codec(fed.downlink_compressor, fed, "downlink")
+        self.ef_enabled = (self.up is not None and self.up.lossy
+                          and fed.error_feedback)
+        self.uplink_bytes = 0        # measured (wire format) totals
+        self.uplink_bytes_raw = 0    # uncompressed baselines
+        self.downlink_bytes = 0
+        self.downlink_bytes_raw = 0
+        self._up_nbytes = self._up_raw = 0
+        self._down_nbytes = self._down_raw = 0
+
+    # --- jit-side ------------------------------------------------------
+    def broadcast(self, params, ctx, key=None):
+        """Downlink: (θ_t, client ctx) -> what the clients actually receive.
+        Lossless codecs return the inputs untouched (bit-exact)."""
+        if self.down is None or not self.down.lossy:
+            return params, ctx
+        if key is None:
+            # failing fast beats silently reusing one noise draw: a constant
+            # key would correlate the stochastic-rounding error across every
+            # round, and the downlink has no EF to drain the resulting bias
+            raise ValueError("a lossy downlink codec needs a per-round PRNG "
+                             "key; pass key= to broadcast()/client_ctx()")
+        tree = (params, ctx)
+        (params_w, ctx_w), _ = self.down.roundtrip(tree, T.zeros_like(tree),
+                                                   key)
+        return params_w, ctx_w
+
+    def uplink(self, delta, ef, key):
+        """One client's uplink round trip: -> (dense reconstruction the
+        server aggregates, new EF residual).  vmap over clients."""
+        if self.up is None:
+            return delta, ef
+        return self.up.roundtrip(delta, ef, key)
+
+    def uplink_encode(self, delta, ef, key):
+        if self.up is None:
+            return delta, ef
+        return self.up.encode(delta, ef, key)
+
+    def uplink_decode(self, wire, like):
+        if self.up is None:
+            return wire
+        return self.up.decode(wire, like)
+
+    # --- host-side accounting ------------------------------------------
+    def set_wire_templates(self, uplink_template, downlink_template=None):
+        """Precompute per-client wire sizes from (ShapeDtypeStruct) pytree
+        templates: uplink = the delta tree, downlink = (θ_t, ctx)."""
+        self._up_raw = C.raw_nbytes(uplink_template)
+        self._up_nbytes = (self._up_raw if self.up is None
+                           else self.up.wire_nbytes(uplink_template))
+        if downlink_template is not None:
+            self._down_raw = C.raw_nbytes(downlink_template)
+            self._down_nbytes = (self._down_raw if self.down is None
+                                 else self.down.wire_nbytes(downlink_template))
+
+    def account_uplink(self, n_clients: int = 1):
+        self.uplink_bytes += n_clients * self._up_nbytes
+        self.uplink_bytes_raw += n_clients * self._up_raw
+
+    def account_downlink(self, n_clients: int = 1):
+        self.downlink_bytes += n_clients * self._down_nbytes
+        self.downlink_bytes_raw += n_clients * self._down_raw
+
+    # template-free probes (benchmarks, shims)
+    def uplink_wire_nbytes(self, template) -> int:
+        return (C.raw_nbytes(template) if self.up is None
+                else self.up.wire_nbytes(template))
+
+    def downlink_wire_nbytes(self, template) -> int:
+        return (C.raw_nbytes(template) if self.down is None
+                else self.down.wire_nbytes(template))
+
+
+@functools.lru_cache(maxsize=None)
+def shim_transport(fed) -> Transport:
+    """Stateless cached instance backing the deprecated
+    ``strategy.compress_delta`` shim (counters unused there)."""
+    return Transport(fed)
+
+
+def downlink_nbytes(fed, params, ctx) -> int:
+    """Measured bytes one client receives per round under fed's downlink
+    codec (raw broadcast bytes when downlink compression is off)."""
+    return Transport(fed).downlink_wire_nbytes((params, ctx))

@@ -119,6 +119,37 @@ def topk_compress_leaf(v, thresh):
             _from_tiles(r, pad, v.shape, v.dtype))
 
 
+def topk_sparse_leaf(v, k):
+    """True sparse top-k select on one leaf: the k largest-|v| entries leave
+    as (values, flat indices) — the actual wire representation — and the
+    residual keeps everything else (DESIGN.md §Transport).
+
+    -> (values (k,), indices (k,) int32, residual of v's shape/dtype).
+
+    Selection and residual are exact complements by construction (the
+    residual zeroes exactly the gathered indices), so
+    ``sparse_scatter_leaf(values, indices) + residual == v`` bitwise.  No
+    Pallas kernel: top-k and gather/scatter lower to XLA's sort/dynamic-
+    gather, which are memory-bound and already single-pass — the fused
+    threshold kernel only pays off on the dense path where the select is an
+    elementwise mask over the full tensor.
+    """
+    flat = v.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = idx.astype(jnp.int32)
+    values = flat[idx]
+    residual = flat.at[idx].set(0).reshape(v.shape)
+    return values, idx, residual
+
+
+def sparse_scatter_leaf(values, indices, shape, dtype):
+    """Server-side decode of one sparse leaf: scatter (values, indices) into
+    a dense zero tensor — one scatter per client instead of re-running the
+    dense threshold pass."""
+    n = int(np.prod(shape)) if shape else 1
+    return jnp.zeros((n,), dtype).at[indices].set(values).reshape(shape)
+
+
 # ---------------------------------------------------------------------------
 # attention / ssd / kd
 # ---------------------------------------------------------------------------

@@ -58,6 +58,11 @@ def train_inputs(mcfg: ModelConfig, shape: ShapeConfig, fed: FedConfig,
         "tokens": _sds((CP, CS, H, b, L), jnp.int32, mesh, bspec),
         "labels": _sds((CP, CS, H, b, L), jnp.int32, mesh, bspec),
     }
+    from repro.federated.transport import Transport
+    if Transport(fed).ef_enabled:
+        # the round's client identities, addressing the sharded EF store
+        batch["client_ids"] = _sds((CP, CS), jnp.int32, mesh,
+                                   P(lead, None))
     if mcfg.is_encoder_decoder:
         fspec = P(*bspec, None)
         batch["frames"] = _sds((CP, CS, H, b, min(L, mcfg.max_seq_len),
@@ -141,4 +146,11 @@ def state_inputs(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         "round": jax.ShapeDtypeStruct((), jnp.int32,
                                       sharding=NamedSharding(mesh, P())),
     }
+    if "clients" in st:
+        # sharded per-client store: leading n_clients axis replicated, the
+        # parameter dims shard like the parameter they mirror
+        # (param_shardings pads a leading None for stacked runs)
+        c_sh = S.param_shardings(st["clients"], mesh, mode=mode,
+                                 fsdp_over_pod=fsdp_over_pod, tp_off=tp_off)
+        out["clients"] = jax.tree.map(attach, st["clients"], c_sh)
     return out

@@ -10,11 +10,21 @@ Maps one FedADC communication round onto the production mesh:
   and client-parallel across the "pod" axis (``vmap``; the Δ̄/momentum
   all-reduce over pods is the ONLY cross-pod collective per round, which is
   the FL communication pattern);
-* the server update (pseudo-momentum + model update) is sharded pointwise.
+* the server update (pseudo-momentum + model update) is sharded pointwise;
+* both wire directions ride the round protocol's ``Transport`` (DESIGN.md
+  §Transport): the (θ_t, ctx) broadcast through the downlink codec, each
+  client delta through the uplink codec inside the client-serial scan;
+* per-client error-feedback residuals live in a mesh-resident
+  ``sharded_*`` client store inside the train state (``state["clients"]``,
+  leading axis ``fed.n_clients``; parameter dims shard like the parameter
+  they mirror) — this engine is no longer stateless-client for EF, which
+  lifts the old "lossy compression + error_feedback rejected on the pod
+  engine" restriction.
 
 ``train_step(state, batch)`` is one full communication round:
 batch["tokens"]: (CP, CS, H, b, L) where CP·CS = clients_per_round and
-H = fed.local_steps.
+H = fed.local_steps.  When the EF store is active, batch["client_ids"]
+(CP, CS) int32 names the round's clients; it defaults to slots 0..R−1.
 """
 from __future__ import annotations
 
@@ -29,10 +39,20 @@ from repro.core import distillation as D
 from repro.core import tree as T
 from repro.core.strategies import get_strategy
 from repro.federated import aggregation as A
+from repro.federated import store as CS
+from repro.federated.transport import Transport
 from repro.models.registry import get_model
 
 POD_SUPPORTED = ("fedavg", "slowmo", "fedadc", "fedadc_double", "fedprox",
                  "fedadc+")
+
+
+def _wire_dtype(run: RunConfig):
+    """The dtype client deltas (and hence EF residuals) live in: the
+    compute dtype under the mixed-precision round, else the param dtype."""
+    mixed = (jnp.dtype(run.param_dtype) == jnp.float32
+             and jnp.dtype(run.compute_dtype) == jnp.bfloat16)
+    return jnp.dtype(run.compute_dtype) if mixed else jnp.dtype(run.param_dtype)
 
 
 def init_state(rng, mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
@@ -40,9 +60,15 @@ def init_state(rng, mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
     dtype = jnp.dtype(run.param_dtype)
     params = model.init(rng, mcfg, dtype=dtype)
     strategy = get_strategy(fed.strategy)
-    return {"params": params,
-            "server": strategy.server_init(params),
-            "round": jnp.zeros((), jnp.int32)}
+    state = {"params": params,
+             "server": strategy.server_init(params),
+             "round": jnp.zeros((), jnp.int32)}
+    if Transport(fed).ef_enabled:
+        # mesh-resident per-client EF store (leading axis n_clients); dtype
+        # matches the wire the residual is the complement of
+        ef_template = T.cast(params, _wire_dtype(run))
+        state["clients"] = {"ef": CS.sharded_init(ef_template, fed.n_clients)}
+    return state
 
 
 def state_shapes(mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
@@ -103,13 +129,10 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             "drag aggregation in the pod engine needs a server-momentum "
             "reference (slowmo/fedadc/fedadc_double); the client-serial "
             "scan has no round mean to fall back on.")
-    from repro.federated.compression import get_compressor
-    compressor = get_compressor(fed)
-    if compressor is not None and compressor.lossy and fed.error_feedback:
-        raise ValueError(
-            "the pod engine is stateless-client (no per-client store to "
-            "carry EF residuals across rounds); use error_feedback=False "
-            "or run the simulator / async engine.")
+    transport = Transport(fed)
+    transported = transport.up is not None
+    ef_enabled = transport.ef_enabled
+    lossy_down = transport.down is not None and transport.down.lossy
     model = get_model(mcfg)
     strategy = get_strategy(fed.strategy)
     loss_fn = _local_objective(model, mcfg, fed, run)
@@ -136,35 +159,47 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         (theta_H, _), ls = jax.lax.scan(local, (theta_t, extra0), cb)
         return T.sub(theta_t, theta_H), jnp.mean(ls)
 
-    def per_group(theta_t, ctx, ref, cbs, gkey):
+    def per_group(theta_t, ctx, ref, cbs, gkey, efs=None):
         """cbs: dict with leading (CS, H, b) — serial clients, weighted
         Δ-accumulation.  The aggregator weight for each client is computed in
         streaming form (repro.federated.aggregation.streaming_weight) against
         the server-momentum reference direction, so DRAG-style adaptive
         weighting works without materialising the CS deltas.  Each client's
-        delta passes through the uplink compression hook (zero EF memory —
-        stateless engine) before weighting/accumulation, so the aggregate is
-        built from the server's wire reconstructions."""
+        delta rides the transport's uplink round trip against its gathered
+        EF residual (`efs`, leading CS; zeros when EF is off) before
+        weighting/accumulation, so the aggregate is built from the server's
+        wire reconstructions and the updated residuals flow back out for the
+        scatter into the sharded client store.  `efs` is None when the EF
+        store is off — each client then compresses against a zero residual
+        (the pre-store behaviour) and a scalar dummy rides the scan ys."""
         cs = jax.tree.leaves(cbs)[0].shape[0]
         ckeys = jax.random.split(gkey, cs)
 
         def serial(carry, inp):
-            cb, ck = inp
+            cb, ck = inp[:2]
+            ef = inp[2] if efs is not None else None
             acc, wsum = carry
             d, l = client_delta(theta_t, ctx, cb)
-            if compressor is not None:
-                d, _ = strategy.compress_delta(d, T.zeros_like(d), ck, fed)
+            new_ef = ef if efs is not None else jnp.zeros(())
+            if transported:
+                d, new_ef = transport.uplink(
+                    d, T.zeros_like(d) if ef is None else ef, ck)
+                if efs is None:
+                    new_ef = jnp.zeros(())   # residual not carried
             w = A.streaming_weight(d, ref, fed.aggregator, fed.drag_lambda)
             acc = jax.tree.map(lambda a, di: a + w.astype(di.dtype) * di,
                                acc, d)
-            return (acc, wsum + w), l
+            return (acc, wsum + w), (l, new_ef)
         acc0 = (T.zeros_like(theta_t), jnp.zeros(()))
-        (acc, wsum), ls = jax.lax.scan(serial, acc0, (cbs, ckeys))
-        return acc, wsum, jnp.mean(ls)
+        xs = (cbs, ckeys) if efs is None else (cbs, ckeys, efs)
+        (acc, wsum), (ls, new_efs) = jax.lax.scan(serial, acc0, xs)
+        return acc, wsum, jnp.mean(ls), new_efs
 
     compute_dtype = jnp.dtype(run.compute_dtype)
 
     def train_step(state: Dict, batch: Dict):
+        batch = dict(batch)
+        client_ids = batch.pop("client_ids", None)
         theta_master = state["params"]
         # mixed-precision round (§Perf iteration 7): the server keeps the
         # master θ/m in param_dtype; the per-round broadcast, local steps,
@@ -182,24 +217,49 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
                                     m=T.cast(server_ctx_state["m"],
                                              compute_dtype))
         ctx = strategy.client_setup(server_ctx_state, theta_t, fed)
-        ref = server_ctx_state.get("m") if fed.aggregator == "drag" else None
-        CP = batch["tokens"].shape[0]
+        ref = A.reference_direction(server_ctx_state) \
+            if fed.aggregator == "drag" else None
+        CP, CSn = batch["tokens"].shape[:2]
         # per-round compression randomness, deterministic in (run seed,
         # round index) so replicate experiments draw independent noise
-        pod_keys = jax.random.split(
-            jax.random.fold_in(jax.random.PRNGKey(run.seed),
-                               state["round"]), CP)
+        round_key = jax.random.fold_in(jax.random.PRNGKey(run.seed),
+                                       state["round"])
+        pod_keys = jax.random.split(round_key, CP)
+        if lossy_down:
+            # clients everywhere train on the broadcast reconstruction
+            theta_t, ctx = transport.broadcast(
+                theta_t, ctx, jax.random.fold_in(round_key, 0xD0))
+        if ef_enabled:
+            if client_ids is None:
+                # default identification: slot i of the round is client i
+                client_ids = jnp.arange(CP * CSn,
+                                        dtype=jnp.int32).reshape(CP, CSn)
+            efs = jax.tree.map(
+                lambda x: x.reshape((CP, CSn) + x.shape[1:]),
+                CS.sharded_gather(state["clients"]["ef"],
+                                  client_ids.reshape(-1)))
+        else:
+            efs = None
         if CP == 1:
             squeezed = jax.tree.map(lambda x: x[0], batch)
-            acc, wsum, loss = per_group(theta_t, ctx, ref, squeezed,
-                                        pod_keys[0])
+            efs0 = None if efs is None else jax.tree.map(lambda x: x[0], efs)
+            acc, wsum, loss, new_efs = per_group(theta_t, ctx, ref, squeezed,
+                                                 pod_keys[0], efs0)
             group_means = jax.tree.map(
                 lambda a: (a / wsum.astype(a.dtype))[None], acc)
             gweights = wsum[None]
+            if efs is not None:
+                new_efs = jax.tree.map(lambda x: x[None], new_efs)
         else:
-            accs, wsums, losses = jax.vmap(
-                lambda cbs, gk: per_group(theta_t, ctx, ref, cbs, gk)
-            )(batch, pod_keys)
+            if efs is None:
+                accs, wsums, losses, new_efs = jax.vmap(
+                    lambda cbs, gk: per_group(theta_t, ctx, ref, cbs, gk)
+                )(batch, pod_keys)
+            else:
+                accs, wsums, losses, new_efs = jax.vmap(
+                    lambda cbs, gk, e: per_group(theta_t, ctx, ref, cbs,
+                                                 gk, e)
+                )(batch, pod_keys, efs)
             group_means = jax.tree.map(
                 lambda a: a / wsums.reshape((-1,) + (1,) * (a.ndim - 1)
                                             ).astype(a.dtype), accs)
@@ -214,6 +274,11 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             state["server"], theta_master, mean_delta, fed)
         new_state = {"params": new_params, "server": new_server,
                      "round": state["round"] + 1}
+        if ef_enabled:
+            flat_new = jax.tree.map(
+                lambda x: x.reshape((-1,) + x.shape[2:]), new_efs)
+            new_state["clients"] = {"ef": CS.sharded_scatter(
+                state["clients"]["ef"], client_ids.reshape(-1), flat_new)}
         return new_state, {"loss": loss}
 
     return train_step

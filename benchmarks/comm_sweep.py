@@ -1,6 +1,6 @@
 """Accuracy-vs-bytes frontier (the measured version of Sec. II-A).
 
-Two sweeps on the synthetic non-IID benchmark (sorted 2-class shards, the
+Three sweeps on the synthetic non-IID benchmark (sorted 2-class shards, the
 paper's hardest skew):
 
 * **sync** — strategy × uplink codec on the synchronous simulator: final
@@ -12,6 +12,12 @@ paper's hardest skew):
   a bimodal straggler fleet with buffered-K aggregation, with and without
   staleness discounting, so the frontier shows how lossy uplinks compose
   with stale pseudo-gradients (EF mass is conserved across drops).
+* **downlink** — the downlink frontier: FedADC under the per-direction
+  downlink codecs, headlined by the momentum-aware Δm̄ reference-coded
+  broadcast (``delta``), which drives measured downlink from the naive 2×
+  raw θ (the wire tree carries m̄_t) to ~1× — the paper's overlapped
+  broadcast, now measured — while staying bit-lossless; ``delta+topk`` /
+  ``delta+qsgd`` push below 1× by compressing the θ-delta itself.
 
 Headline check (asserted into the JSON, gated in CI): top-k 10% with error
 feedback stays within 2 accuracy points of the uncompressed FedADC run
@@ -61,6 +67,18 @@ ASYNC_HETERO = HeteroConfig(enabled=True, speed_dist="bimodal",
                             straggler_frac=0.25, straggler_slowdown=4.0,
                             seed=0)
 
+# downlink frontier: FedADC × per-direction downlink codecs.  The
+# "down_none" baseline is not re-run: it is the sync sweep's
+# ("fedadc", "none") cell (byte-for-byte the same configuration), reused
+# in main() instead of duplicating the longest 90-round run.
+DOWNLINK_KNOBS = (
+    ("down_delta", {"downlink_compressor": "delta"}),
+    ("down_delta_topk10", {"downlink_compressor": "delta+topk",
+                           "downlink_topk_frac": 0.10}),
+    ("down_delta_qsgd8", {"downlink_compressor": "delta+qsgd",
+                          "downlink_qsgd_bits": 8}),
+)
+
 
 def _cell(name_kv, r):
     s = r["sim"]
@@ -86,6 +104,30 @@ def sweep(rounds=90, n_clients=20, seed=0):
             r = run_fl(strat, parts, data, rounds=rounds,
                        n_clients=n_clients, seed=seed, extra_fed=extra)
             cells.append(_cell({"strategy": strat, "compressor": cname}, r))
+    return cells
+
+
+def _down_ratio(cell):
+    # measured broadcast bytes against the raw θ a client uploads — the
+    # paper's "no additional communication load" axis
+    return round(cell["downlink_bytes"] / cell["uplink_bytes_raw"], 3)
+
+
+def downlink_sweep(base_cell, rounds=90, n_clients=20, seed=0):
+    """FedADC downlink frontier.  `base_cell` is the sync sweep's
+    ("fedadc", "none") cell, reused as the "down_none" baseline."""
+    data = dataset()
+    parts = partitions(data[1], n_clients, "sort", 2, seed=seed)
+    down_none = dict(base_cell, downlink="down_none",
+                     downlink_vs_uplink_raw=_down_ratio(base_cell))
+    down_none.pop("compressor", None)
+    cells = [down_none]
+    for dname, extra in DOWNLINK_KNOBS:
+        r = run_fl("fedadc", parts, data, rounds=rounds,
+                   n_clients=n_clients, seed=seed, extra_fed=extra)
+        cell = _cell({"strategy": "fedadc", "downlink": dname}, r)
+        cell["downlink_vs_uplink_raw"] = _down_ratio(cell)
+        cells.append(cell)
     return cells
 
 
@@ -126,18 +168,34 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
             f"acc={c['acc']};up_MB={c['uplink_bytes']/2**20:.2f};"
             f"stale={c['mean_staleness']:.2f};"
             f"reduction={c['bytes_reduction']:.2f}x"))
+    downlink_cells = downlink_sweep(by[("fedadc", "none")], rounds=rounds)
+    for c in downlink_cells:
+        rows.append(emit(
+            f"comm_sweep.downlink.fedadc.{c['downlink']}",
+            c["us_per_round"],
+            f"acc={c['acc']};down_MB={c['downlink_bytes']/2**20:.2f};"
+            f"down_vs_up_raw={c['downlink_vs_uplink_raw']:.3f}x"))
     base = by[("fedadc", "none")]
     topk = by[("fedadc", "topk10_ef")]
     acc_gap = base["acc"] - topk["acc"]
     reduction = topk["bytes_reduction"]
     rows.append(emit("comm_sweep.fedadc_topk10_vs_uncompressed", 0,
                      f"acc_gap={acc_gap:.4f};bytes_reduction={reduction:.2f}x"))
+    down_by = {c["downlink"]: c for c in downlink_cells}
+    d_none, d_delta = down_by["down_none"], down_by["down_delta"]
+    delta_ratio = d_delta["downlink_vs_uplink_raw"]
+    rows.append(emit(
+        "comm_sweep.fedadc_delta_downlink_vs_naive", 0,
+        f"delta={delta_ratio:.3f}x;naive="
+        f"{d_none['downlink_vs_uplink_raw']:.3f}x;"
+        f"lossless_acc_equal={d_delta['acc'] == d_none['acc']}"))
     report = {
         "benchmark": "synthetic non-IID (sorted 2-class shards)",
         "rounds": rounds,
         "async_rounds": async_rounds,
         "cells": cells,
         "async_cells": async_cells,
+        "downlink_cells": downlink_cells,
         "headline": {
             "fedadc_acc_uncompressed": base["acc"],
             "fedadc_acc_topk10_ef": topk["acc"],
@@ -145,11 +203,19 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
             "bytes_reduction": reduction,
             "within_2pts": bool(acc_gap <= 0.02),
             "reduction_ge_5x": bool(reduction >= 5.0),
-            # measured (not analytic) downlink: FedADC's broadcast carries
-            # m̄_t, so its wire tree is 2× the parameter bytes
+            # measured (not analytic) downlink: FedADC's naive broadcast
+            # carries m̄_t, so its wire tree is 2× the parameter bytes ...
             "fedadc_downlink_vs_uplink_raw": round(
                 base["downlink_bytes_raw"] / base["uplink_bytes_raw"], 2),
             "downlink_measured": True,
+            # ... and the momentum-aware Δm̄ reference-coded broadcast
+            # recovers the paper's overlapped ~1× (round 0 pays the full
+            # initial sync; every later round ships θ-delta bytes with the
+            # derived ctx at 0), bit-lossless vs the plain broadcast
+            "fedadc_downlink_delta_vs_uplink_raw": delta_ratio,
+            "downlink_delta_le_1p1": bool(delta_ratio <= 1.1),
+            "downlink_delta_lossless": bool(
+                d_delta["acc"] == d_none["acc"]),
         },
     }
     with open(out_json, "w") as f:

@@ -247,9 +247,21 @@ class FedConfig:
     sparse_uplink: bool = False
     # downlink broadcast compression (Transport.broadcast): the server
     # compresses (θ_t, ctx) once per round, clients train on the wire
-    # reconstruction.  Stateless server-side (no EF: the broadcast has no
-    # per-client residual to carry).  none/identity are bit-exact.
-    downlink_compressor: str = "none"   # none | identity | topk | qsgd
+    # reconstruction.  none/identity are bit-exact.  The delta family is
+    # the momentum-aware reference-coded broadcast (DESIGN.md §Transport):
+    # the server keeps the last broadcast reconstruction (θ_{t−1}, m̄_{t−1})
+    # in its round state and ships deltas against it — "delta" (=
+    # "delta+identity") transports the residual losslessly, "delta+topk" /
+    # "delta+qsgd" compose a lossy codec on the delta, where compression
+    # actually bites.  For FedADC the ctx is an exact scalar image of the
+    # θ-delta (Δθ_t = −αη·m_t, m̄_t = β_l/H·m_t), so the delta-coded ctx
+    # costs 0 wire bytes and the broadcast recovers the paper's 1× load.
+    downlink_compressor: str = "none"   # none | identity | topk | qsgd |
+                                        # delta[+identity|+topk|+qsgd]
+    # per-direction knobs: the downlink codec falls back to the uplink
+    # topk_frac / qsgd_bits when these are None
+    downlink_topk_frac: Optional[float] = None
+    downlink_qsgd_bits: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------

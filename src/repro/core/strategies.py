@@ -151,6 +151,18 @@ class FedADC(FedAvg):
         return {"m_bar": T.scale(server_state["m"],
                                  fed.beta_local / fed.local_steps)}
 
+    # ctx broadcast leaves are an exact scalar image of the θ-delta
+    # (server_update: Δθ_t = −α·η·m_t while m̄_t = β_l/H · m_t), so the
+    # delta-coded downlink derives the ctx from the θ wire instead of
+    # transporting it — the momentum-aware 0-byte ctx (DESIGN.md
+    # §Transport).  `delta_params` is the decoded θ-delta the clients
+    # received; the scale is config-derived, never transmitted.
+    def _ctx_scale(self, fed):
+        return -fed.beta_local / (fed.local_steps * fed.alpha * fed.eta)
+
+    def ctx_from_broadcast_delta(self, delta_params, fed):
+        return {"m_bar": T.scale(delta_params, self._ctx_scale(fed))}
+
     def local_step(self, theta, ctx, grad_fn, batch, fed, extra):
         m_bar = ctx["m_bar"]
         if fed.variant == "nesterov":
@@ -184,6 +196,10 @@ class FedADCDouble(FedADC):
     def client_setup(self, server_state, params, fed):
         return {"m_bar": T.scale(server_state["m"],
                                  fed.beta_global / fed.local_steps)}
+
+    def _ctx_scale(self, fed):
+        # Alg. 4 broadcasts m̄_t = β_g/H · m_t against the same Δθ = −αη·m_t
+        return -fed.beta_global / (fed.local_steps * fed.alpha * fed.eta)
 
     def init_extra(self, params, fed):
         return {"m_local": T.zeros_like(params), "tau": jnp.zeros((), jnp.int32)}

@@ -94,11 +94,21 @@ def compute_weights(name: str, deltas, n_examples=None, ref=None,
 
 
 def weighted_mean(deltas, weights, use_pallas: bool = False):
-    """Σ_i w_i·Δ_i / Σ_i w_i over a stacked pytree (leading axis K)."""
+    """Σ_i w_i·Δ_i / Σ_i w_i over a stacked pytree (leading axis K).
+
+    The reduction accumulates in fp32 whatever the delta dtype and casts on
+    write: summing bf16 deltas in bf16 loses the aggregate to rounding as K
+    grows (once the partial sum's ulp outgrows the per-client increments,
+    late clients round away entirely) — fp32↔ref↔fp64 parity is pinned at
+    bf16, K ≥ 64, in tests/test_kernels.py."""
     wn = weights.astype(jnp.float32) / jnp.maximum(jnp.sum(weights), _EPS)
     if use_pallas:
         from repro.kernels import ops
         return ops.weighted_delta_reduce(deltas, wn)
-    return jax.tree.map(
-        lambda d: jnp.tensordot(wn.astype(d.dtype), d, axes=([0], [0])),
-        deltas)
+
+    def leaf(d):
+        # at least fp32, but never downcast (float64 deltas reduce in f64)
+        acc_t = jnp.promote_types(d.dtype, jnp.float32)
+        return jnp.tensordot(wn.astype(acc_t), d.astype(acc_t),
+                             axes=([0], [0])).astype(d.dtype)
+    return jax.tree.map(leaf, deltas)

@@ -80,31 +80,64 @@ class AsyncFederatedSimulator(FederatedSimulator):
                                         fed.local_steps)
         self._deltas_fn = jax.jit(self._make_deltas_fn())
         self._apply_fn = jax.jit(self._make_apply_fn())
+        self._bcast_fn = jax.jit(self._make_bcast_fn())
         self.version = 0              # number of server updates applied
         self.vtime = 0.0              # virtual clock
         self.event_log: List[tuple] = []   # (kind, time, client, version)
         self.staleness_seen: List[int] = []
         self._dispatch_ctr = 0        # compression PRNG stream, event order
+        # one broadcast per server version: every dispatch at version v
+        # hands out the same wire reconstruction (a broadcast is one
+        # multicast), and the delta codec's reference advances exactly once
+        # per version — stale clients therefore trained against the
+        # reference version they were dispatched with
+        self._bcast_cache = None      # (version, params_w, ctx_w)
 
     # ------------------------------------------------------------------
-    def _make_deltas_fn(self):
-        """(params, server_state, xb, yb, counts, cstates, efs, keys, gkey)
-        -> (stacked uplink deltas, new EF states, losses) for one dispatch
-        group — the same vmapped client_update the synchronous round uses,
-        minus the aggregation, plus the protocol's wire round trips (the
-        dispatched clients train on the downlink broadcast reconstruction;
-        each uplinks against its EF memory at dispatch; the server later
-        discounts/aggregates the decoded reconstructions)."""
+    def _make_bcast_fn(self):
+        """(params, server_state, down_ref, key) -> (params_w, ctx_w,
+        new_ref): one server broadcast through the downlink codec.  Jit'd
+        separately from the dispatch groups so a version's broadcast is
+        computed once and every group at that version receives the same
+        wire reconstruction."""
         protocol = self.protocol
-        client_update = self._make_client_update()
-        transported = protocol.transport.up is not None
         down = protocol.transport.down
         lossy_down = down is not None and down.lossy
 
-        def deltas_fn(params, server_state, xb, yb, counts, cstates, efs,
-                      keys, gkey):
-            dkey = jax.random.fold_in(gkey, 0xD0) if lossy_down else None
-            params_w, ctx = protocol.client_ctx(server_state, params, dkey)
+        def bcast_fn(params, server_state, down_ref, key):
+            dkey = key if lossy_down else None
+            return protocol.client_ctx(server_state, params, dkey, down_ref)
+
+        return bcast_fn
+
+    def _broadcast(self):
+        """The version-v broadcast, computed once per server version and
+        cached until the next update: encodes against the reference state
+        R_{v−1} and advances it to the new reconstruction R_v."""
+        if self._bcast_cache is None or self._bcast_cache[0] != self.version:
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._comp_key, 0xB0), self.version)
+            params_w, ctx, new_ref = self._bcast_fn(
+                self.params, self.server_state, self._down_ref, key)
+            if self.transport.needs_downlink_ref:
+                self._down_ref = new_ref
+            self._bcast_cache = (self.version, params_w, ctx)
+        return self._bcast_cache[1], self._bcast_cache[2]
+
+    def _make_deltas_fn(self):
+        """(params_w, ctx, xb, yb, counts, cstates, efs, keys) -> (stacked
+        uplink deltas, new EF states, losses) for one dispatch group — the
+        same vmapped client_update the synchronous round uses, minus the
+        aggregation, plus the uplink wire round trips.  The dispatched
+        clients train on the downlink broadcast reconstruction handed in
+        from ``_broadcast`` (one per server version); each uplinks against
+        its EF memory at dispatch; the server later discounts/aggregates
+        the decoded reconstructions."""
+        protocol = self.protocol
+        client_update = self._make_client_update()
+        transported = protocol.transport.up is not None
+
+        def deltas_fn(params_w, ctx, xb, yb, counts, cstates, efs, keys):
             deltas, _, losses, _ = jax.vmap(
                 lambda x, y, c, cs: client_update(params_w, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
@@ -159,6 +192,7 @@ class AsyncFederatedSimulator(FederatedSimulator):
         if n <= 0:
             return
         picks = self._sample_clients(n)
+        params_w, ctx = self._broadcast()
         by_h: Dict[int, List[int]] = {}
         for c in picks:
             by_h.setdefault(int(self.system.local_steps[int(c)]), []).append(
@@ -175,13 +209,15 @@ class AsyncFederatedSimulator(FederatedSimulator):
             keys = jax.random.split(gkey, len(group))
             self._dispatch_ctr += 1
             deltas, new_efs, losses = self._deltas_fn(
-                self.params, self.server_state, xb, yb, counts, cstates,
-                efs, keys, gkey)
+                params_w, ctx, xb, yb, counts, cstates, efs, keys)
             if self.ef_enabled:
                 self._put_ef_states(group, new_efs)
             # every dispatched client receives the (θ_t, ctx) broadcast —
-            # downlink bytes are paid at dispatch, uplink on arrival
-            self.transport.account_downlink(len(group))
+            # downlink bytes are paid at dispatch (dropped uploads lose the
+            # uplink only), and version 0's broadcast is the full initial
+            # sync under the delta codec
+            self.transport.account_downlink(len(group),
+                                            resync=(self.version == 0))
             for j, c in enumerate(group):
                 rec = _InFlight(
                     client=c, version=self.version,

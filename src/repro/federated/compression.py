@@ -179,21 +179,27 @@ class QSGDCompressor(Compressor):
 
 
 @functools.lru_cache(maxsize=None)
-def get_compressor(fed) -> Optional[Compressor]:
-    """FedConfig -> Compressor instance (None when compressor='none', i.e.
-    the hook is bypassed and the round runs the pre-compression code path).
-    Cached on the frozen config so jit tracing reuses one instance."""
-    name = fed.compressor
+def _get_compressor(name: str, topk_frac: float, qsgd_bits: int,
+                    use_pallas: bool) -> Optional[Compressor]:
     if name == "none":
         return None
     if name == "identity":
         return IdentityCompressor()
     if name == "topk":
-        return TopKCompressor(fed.topk_frac, fed.use_pallas)
+        return TopKCompressor(topk_frac, use_pallas)
     if name == "qsgd":
-        return QSGDCompressor(fed.qsgd_bits, fed.use_pallas)
+        return QSGDCompressor(qsgd_bits, use_pallas)
     raise ValueError(f"unknown compressor {name!r}; "
                      f"known: {', '.join(KNOWN_COMPRESSORS)}")
+
+
+def get_compressor(fed) -> Optional[Compressor]:
+    """FedConfig -> Compressor instance (None when compressor='none', i.e.
+    the hook is bypassed and the round runs the pre-compression code path).
+    Cached on the wire-relevant knobs only (not the whole config), so jit
+    tracing reuses one instance per codec instead of one per config."""
+    return _get_compressor(fed.compressor, fed.topk_frac, fed.qsgd_bits,
+                           fed.use_pallas)
 
 
 def uplink_nbytes(fed, params) -> int:

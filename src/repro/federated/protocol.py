@@ -69,12 +69,24 @@ class RoundProtocol:
     def register_ef(self, init_fn: Callable) -> None:
         self.store.register("ef", init_fn)
 
-    # --- jit-side protocol steps ----------------------------------------
-    def client_ctx(self, server_state, params, key=None):
-        """Step 1: build the strategy's client context and push (θ_t, ctx)
-        through the downlink codec.  -> (params', ctx') as received."""
+    def init_downlink_ref(self, server_state, params):
+        """The delta downlink codec's round-0 broadcast reference: the
+        out-of-band initial sync (θ_0, ctx_0) every client starts from, so
+        the first wire delta is exactly zero.  None for stateless codecs."""
+        if not self.transport.needs_downlink_ref:
+            return None
         ctx = self.strategy.client_setup(server_state, params, self.fed)
-        return self.transport.broadcast(params, ctx, key)
+        return self.transport.init_downlink_ref(params, ctx)
+
+    # --- jit-side protocol steps ----------------------------------------
+    def client_ctx(self, server_state, params, key=None, ref=None):
+        """Step 1: build the strategy's client context and push (θ_t, ctx)
+        through the downlink codec.  -> (params', ctx', new_ref) as
+        received; `ref`/`new_ref` carry the delta codec's broadcast
+        reference state (None for stateless downlink codecs) — engines
+        thread it through their round loop."""
+        ctx = self.strategy.client_setup(server_state, params, self.fed)
+        return self.transport.broadcast(params, ctx, key, ref)
 
     def uplink(self, delta, ef, key):
         """Step 3: one client's wire round trip (vmap over clients)."""

@@ -95,6 +95,13 @@ class FederatedSimulator:
             lambda ss, p: self.strategy.client_setup(ss, p, fed),
             self.server_state, self.params)
         self.transport.set_wire_templates(self.params, (self.params, ctx_t))
+        # delta downlink codec: the broadcast reference state (θ, ctx) the
+        # clients hold, threaded functionally through the jit'd round; the
+        # round-0 reference is the out-of-band initial sync, so the first
+        # wire delta is exactly zero (None for stateless codecs)
+        self._down_ref = self.protocol.init_downlink_ref(self.server_state,
+                                                         self.params)
+        self._rounds_done = 0
         self._round_fn = jax.jit(self._make_round_fn())
         self._eval_fn = jax.jit(self._make_eval_fn())
         self.history: List[Dict] = []
@@ -242,11 +249,13 @@ class FederatedSimulator:
         lossy_down = down is not None and down.lossy
 
         def round_fn(params, server_state, xb, yb, counts, cstates,
-                     n_examples, efs, key):
+                     n_examples, efs, key, down_ref):
             # downlink: clients train on the broadcast wire reconstruction
-            # (bit-identical passthrough for none/identity codecs)
+            # (bit-identical passthrough for none/identity/delta+identity
+            # codecs); `down_ref` is the delta codec's reference state
             dkey = jax.random.fold_in(key, 0xD0) if lossy_down else None
-            params_w, ctx = protocol.client_ctx(server_state, params, dkey)
+            params_w, ctx, new_ref = protocol.client_ctx(server_state, params,
+                                                         dkey, down_ref)
             deltas, ncs, losses, theta_Hs = jax.vmap(
                 lambda x, y, c, cs: client_update(params_w, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
@@ -276,7 +285,7 @@ class FederatedSimulator:
             else:
                 new_params, new_ss = protocol.server_update(
                     server_state, params, mean_delta)
-            return new_params, new_ss, ncs, new_efs, jnp.mean(losses)
+            return new_params, new_ss, ncs, new_efs, jnp.mean(losses), new_ref
 
         return round_fn
 
@@ -323,14 +332,21 @@ class FederatedSimulator:
             n_examples = jnp.asarray([len(self.parts[int(c)]) for c in picks],
                                      jnp.float32)
             efs = self._get_ef_states(picks)
-            self.params, self.server_state, ncs, nefs, loss = self._round_fn(
+            (self.params, self.server_state, ncs, nefs, loss,
+             new_ref) = self._round_fn(
                 self.params, self.server_state, xb, yb, counts, cstates,
-                n_examples, efs, jax.random.fold_in(self._comp_key, t))
+                n_examples, efs, jax.random.fold_in(self._comp_key, t),
+                self._down_ref)
             if self.stateful:
                 self._put_client_states(picks, ncs)
             if self.ef_enabled:
                 self._put_ef_states(picks, nefs)
-            self.transport.account_downlink(len(picks))
+            if self.transport.needs_downlink_ref:
+                self._down_ref = new_ref
+            # the delta codec's first broadcast is the full initial sync
+            self.transport.account_downlink(
+                len(picks), resync=(self._rounds_done == 0))
+            self._rounds_done += 1
             self.transport.account_uplink(len(picks))
             if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()

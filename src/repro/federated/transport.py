@@ -6,11 +6,22 @@ The round protocol used to hand-wire compression per engine through the
 analytic downlink accounting).  ``Transport`` owns both directions of the
 wire instead, and every engine drives it identically:
 
-* **downlink** — ``broadcast(params, ctx, key)``: the server compresses the
-  per-round broadcast (θ_t plus the strategy's client context, e.g. the
+* **downlink** — ``broadcast(params, ctx, key, ref)``: the server compresses
+  the per-round broadcast (θ_t plus the strategy's client context, e.g. the
   FedADC m̄_t) once, and clients train on the wire reconstruction.  The
-  downlink codec is stateless server-side (a broadcast has no per-client
-  residual to carry).  ``none``/``identity`` are bit-exact passthroughs.
+  plain codecs (``none``/``identity``/``topk``/``qsgd``) are stateless
+  server-side; the **delta family** (``delta`` ≡ ``delta+identity``,
+  ``delta+topk``, ``delta+qsgd``) is reference-coded: the server keeps the
+  last broadcast reconstruction (θ_{t−1}, m̄_{t−1}) — the tree every
+  up-to-date client already holds — in its round state and ships only the
+  change, optionally composing a lossy codec on the delta (where
+  compression actually bites; the reference tracks the *reconstruction*,
+  so coding error self-corrects like error feedback instead of
+  accumulating).  Momentum-aware: strategies whose ctx is an exact scalar
+  image of the θ-delta (FedADC: Δθ_t = −αη·m_t, m̄_t = β_l/H·m_t) declare
+  ``ctx_from_broadcast_delta`` and their ctx costs **0 wire bytes** — the
+  clients derive m̄_t from the θ wire, recovering the paper's overlapped 1×
+  broadcast.  ``none``/``identity``/``delta+identity`` are bit-exact.
 * **uplink** — ``uplink(delta, ef, key)``: one client's delta is encoded
   against its error-feedback memory, transported, and decoded; the server
   only ever aggregates wire reconstructions, so the FedADC momentum
@@ -163,21 +174,128 @@ class SparseTopKCodec(Codec):
         return self._acct.wire_nbytes(template)
 
 
+class DeltaDownlinkCodec(Codec):
+    """Reference-coded (momentum-aware) broadcast codec — the first
+    *stateful server-side* wire object.
+
+    The server keeps ``ref`` = the previous round's broadcast
+    reconstruction (θ_{t−1}, ctx_{t−1}), exactly what every up-to-date
+    client holds, and transmits the change:
+
+    * lossless inner codec (``delta`` ≡ ``delta+identity``) — the residual
+      is transported exactly (think a bitwise delta of the float encoding),
+      so the reconstruction IS the current tree; the program passes (θ_t,
+      ctx_t) through untouched and the wire accounting charges the delta
+      tree's raw bytes.  Bit-identical to the plain broadcast (tested on
+      all three engines).
+    * lossy inner codec (``delta+topk`` / ``delta+qsgd``) — the wire is
+      q(θ_t − ref_θ); clients accumulate ref_θ + q, and the new reference
+      is that reconstruction, so coding error enters once and self-corrects
+      across rounds (the broadcast analogue of error feedback).
+
+    Momentum-aware ctx: when the strategy declares
+    ``ctx_from_broadcast_delta`` (FedADC family: Δθ_t = −αη·m_t while
+    m̄_t = β_l/H·m_t, an exact scalar image), the ctx is never transported —
+    clients derive it from the decoded θ-delta — and it costs 0 wire bytes,
+    which is what drives FedADC's measured downlink from 2× raw θ to ~1×.
+    Otherwise the ctx delta rides the inner codec like the params.
+
+    Engines thread ``ref`` functionally (simulator round state, async
+    per-version cache, pod ``state["downlink_ref"]``); the codec itself
+    holds no arrays, so one instance serves jit retraces.  The round-0
+    reference is the out-of-band initial sync (θ_0, ctx_0) — engines
+    account it as one raw broadcast (``account_downlink(resync=True)``).
+    """
+    lossy = True          # overwritten from the inner codec
+
+    def __init__(self, inner: Codec, ctx_derive=None, name: str = "delta"):
+        self.inner = inner
+        self.ctx_derive = ctx_derive
+        self.lossy = inner.lossy
+        self.name = name
+
+    def init_ref(self, params, ctx):
+        """The reference clients hold before round 0: the initial sync."""
+        return (params, ctx)
+
+    def broadcast(self, params, ctx, ref, key):
+        """-> (params_w, ctx_w, new_ref); runs inside jit."""
+        if not self.lossy:
+            # exact residual transport: reconstruction == the current tree
+            return params, ctx, (params, ctx)
+        ref_p, ref_c = ref
+        d_p = T.sub(params, ref_p)
+        q_p, _ = self.inner.roundtrip(d_p, T.zeros_like(d_p),
+                                      jax.random.fold_in(key, 0))
+        params_w = T.add(ref_p, q_p)
+        if self.ctx_derive is not None:
+            ctx_w = self.ctx_derive(q_p)
+        else:
+            d_c = T.sub(ctx, ref_c)
+            q_c, _ = self.inner.roundtrip(d_c, T.zeros_like(d_c),
+                                          jax.random.fold_in(key, 1))
+            ctx_w = T.add(ref_c, q_c)
+        return params_w, ctx_w, (params_w, ctx_w)
+
+    def wire_nbytes(self, template) -> int:
+        """Steady-state per-client bytes: the delta tree through the inner
+        codec, with a derivable ctx charged 0 (the scale is config-derived,
+        never transmitted).  The round-0 resync is accounted separately."""
+        p_t, c_t = template
+        nbytes = self.inner.wire_nbytes(p_t)
+        if self.ctx_derive is None:
+            nbytes += self.inner.wire_nbytes(c_t)
+        return nbytes
+
+
+KNOWN_DOWNLINK = ("none", "identity", "topk", "qsgd", "delta",
+                  "delta+identity", "delta+topk", "delta+qsgd")
+
+
 def make_codec(name: str, fed, direction: str = "uplink") -> Optional[Codec]:
     """Codec for one wire direction (None = bypass, the pre-transport code
-    path with zero added arithmetic)."""
+    path with zero added arithmetic).  The downlink direction resolves the
+    per-direction knobs (``downlink_topk_frac``/``downlink_qsgd_bits``),
+    falling back to the uplink values when unset."""
+    topk_frac, qsgd_bits = fed.topk_frac, fed.qsgd_bits
+    if direction == "downlink":
+        if fed.downlink_topk_frac is not None:
+            topk_frac = fed.downlink_topk_frac
+        if fed.downlink_qsgd_bits is not None:
+            qsgd_bits = fed.downlink_qsgd_bits
     if name == "none":
         return None
     if name == "identity":
         return IdentityCodec()
     if name == "topk":
         if direction == "uplink" and fed.sparse_uplink:
-            return SparseTopKCodec(fed.topk_frac)
-        return DenseCodec(C.TopKCompressor(fed.topk_frac, fed.use_pallas))
+            return SparseTopKCodec(topk_frac)
+        return DenseCodec(C.TopKCompressor(topk_frac, fed.use_pallas))
     if name == "qsgd":
-        return DenseCodec(C.QSGDCompressor(fed.qsgd_bits, fed.use_pallas))
+        return DenseCodec(C.QSGDCompressor(qsgd_bits, fed.use_pallas))
+    if name == "delta" or name.startswith("delta+"):
+        if direction != "downlink":
+            raise ValueError(
+                f"{name!r} is a downlink (broadcast) codec: uplink deltas "
+                f"already are deltas and ride the EF codecs")
+        inner_name = "identity" if name == "delta" else name.partition("+")[2]
+        if inner_name not in ("identity", "topk", "qsgd"):
+            # rejects "delta+", "delta+none", "delta+delta", typos — the
+            # inner codec must be an explicit known transform
+            raise ValueError(f"unknown downlink compressor {name!r}; "
+                             f"known: {', '.join(KNOWN_DOWNLINK)}")
+        inner = make_codec(inner_name, fed, "downlink")
+        from repro.core.strategies import get_strategy  # lazy: layering
+        strategy = get_strategy(fed.strategy)
+        derive = None
+        if hasattr(strategy, "ctx_from_broadcast_delta"):
+            derive = functools.partial(strategy.ctx_from_broadcast_delta,
+                                       fed=fed)
+        return DeltaDownlinkCodec(inner, ctx_derive=derive, name=name)
+    known = KNOWN_DOWNLINK if direction == "downlink" \
+        else C.KNOWN_COMPRESSORS
     raise ValueError(f"unknown {direction} compressor {name!r}; "
-                     f"known: {', '.join(C.KNOWN_COMPRESSORS)}")
+                     f"known: {', '.join(known)}")
 
 
 # ---------------------------------------------------------------------------
@@ -209,22 +327,44 @@ class Transport:
         self._up_nbytes = self._up_raw = 0
         self._down_nbytes = self._down_raw = 0
 
+    @property
+    def needs_downlink_ref(self) -> bool:
+        """True for the reference-coded (delta) downlink: engines must
+        thread the broadcast reference state through their round loop."""
+        return isinstance(self.down, DeltaDownlinkCodec)
+
+    def init_downlink_ref(self, params, ctx):
+        """The round-0 reference (the out-of-band initial sync), or None
+        when the downlink codec is stateless."""
+        if not self.needs_downlink_ref:
+            return None
+        return self.down.init_ref(params, ctx)
+
     # --- jit-side ------------------------------------------------------
-    def broadcast(self, params, ctx, key=None):
-        """Downlink: (θ_t, client ctx) -> what the clients actually receive.
-        Lossless codecs return the inputs untouched (bit-exact)."""
-        if self.down is None or not self.down.lossy:
-            return params, ctx
-        if key is None:
+    def broadcast(self, params, ctx, key=None, ref=None):
+        """Downlink: (θ_t, client ctx) -> (params_w, ctx_w, new_ref) — what
+        the clients actually receive, plus the advanced reference state for
+        the delta codec (None otherwise).  Lossless codecs return the
+        inputs untouched (bit-exact)."""
+        if self.down is not None and self.down.lossy and key is None:
             # failing fast beats silently reusing one noise draw: a constant
             # key would correlate the stochastic-rounding error across every
             # round, and the downlink has no EF to drain the resulting bias
             raise ValueError("a lossy downlink codec needs a per-round PRNG "
                              "key; pass key= to broadcast()/client_ctx()")
+        if self.needs_downlink_ref:
+            if ref is None:
+                raise ValueError(
+                    "the delta downlink codec is stateful: pass ref= (see "
+                    "Transport.init_downlink_ref) and thread the returned "
+                    "reference into the next round")
+            return self.down.broadcast(params, ctx, ref, key)
+        if self.down is None or not self.down.lossy:
+            return params, ctx, None
         tree = (params, ctx)
         (params_w, ctx_w), _ = self.down.roundtrip(tree, T.zeros_like(tree),
                                                    key)
-        return params_w, ctx_w
+        return params_w, ctx_w, None
 
     def uplink(self, delta, ef, key):
         """One client's uplink round trip: -> (dense reconstruction the
@@ -259,8 +399,15 @@ class Transport:
         self.uplink_bytes += n_clients * self._up_nbytes
         self.uplink_bytes_raw += n_clients * self._up_raw
 
-    def account_downlink(self, n_clients: int = 1):
-        self.downlink_bytes += n_clients * self._down_nbytes
+    def account_downlink(self, n_clients: int = 1, resync: bool = False):
+        """`resync=True` marks broadcasts that ship the full tree instead of
+        a delta — the delta codec's round-0 initial sync (engines pass it
+        for every client dispatched at version 0); stateless codecs ignore
+        it (their per-round bytes never depend on history)."""
+        nbytes = self._down_nbytes
+        if resync and self.needs_downlink_ref:
+            nbytes = self._down_raw
+        self.downlink_bytes += n_clients * nbytes
         self.downlink_bytes_raw += n_clients * self._down_raw
 
     # template-free probes (benchmarks, shims)
@@ -274,10 +421,35 @@ class Transport:
 
 
 @functools.lru_cache(maxsize=None)
+def _shim_transport(compressor: str, topk_frac: float, qsgd_bits: int,
+                    error_feedback: bool, sparse_uplink: bool,
+                    use_pallas: bool) -> Transport:
+    from repro.configs.base import FedConfig  # lazy: layering
+    return Transport(FedConfig(
+        compressor=compressor, topk_frac=topk_frac, qsgd_bits=qsgd_bits,
+        error_feedback=error_feedback, sparse_uplink=sparse_uplink,
+        use_pallas=use_pallas))
+
+
 def shim_transport(fed) -> Transport:
     """Stateless cached instance backing the deprecated
-    ``strategy.compress_delta`` shim (counters unused there)."""
-    return Transport(fed)
+    ``strategy.compress_delta`` shim (counters unused there).
+
+    The cache is keyed on the uplink-wire-relevant fields only — the shim
+    never touches the downlink — rather than on the whole config: keying on
+    ``fed`` itself leaks one Transport per distinct config (every ``eta``
+    sweep point would pin an instance) and, were the config mutable, could
+    serve a codec built from stale knobs.  Configs must be frozen so the
+    key fields cannot drift after the codec is built."""
+    params = getattr(type(fed), "__dataclass_params__", None)
+    if params is None or not params.frozen:
+        raise TypeError(
+            f"shim_transport needs a frozen config (got "
+            f"{type(fed).__name__}): a mutable config could change its "
+            f"wire knobs after the cached codec was built")
+    return _shim_transport(fed.compressor, fed.topk_frac, fed.qsgd_bits,
+                           fed.error_feedback, fed.sparse_uplink,
+                           fed.use_pallas)
 
 
 def downlink_nbytes(fed, params, ctx) -> int:

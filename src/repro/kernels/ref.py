@@ -27,9 +27,13 @@ def fedadc_server_update(theta, m, delta_bar, gamma, alpha_eta):
 
 
 def weighted_delta_reduce(deltas, weights):
-    """Σ_k w_k·Δ_k for a single stacked array (K, ...)."""
-    w = weights.astype(deltas.dtype)
-    return jnp.tensordot(w, deltas, axes=([0], [0]))
+    """Σ_k w_k·Δ_k for a single stacked array (K, ...); accumulates in at
+    least fp32 (bf16 partial sums drown the late terms as K grows; f64
+    inputs keep f64), cast back to the delta dtype on write."""
+    acc_t = jnp.promote_types(deltas.dtype, jnp.float32)
+    out = jnp.tensordot(weights.astype(acc_t), deltas.astype(acc_t),
+                        axes=([0], [0]))
+    return out.astype(deltas.dtype)
 
 
 # ---------------------------------------------------------------------------

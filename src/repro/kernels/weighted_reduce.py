@@ -32,16 +32,23 @@ def _row_block(rows: int, k: int, itemsize: int) -> int:
 
 
 def _weighted_reduce_kernel(w_ref, d_ref, o_ref):
-    # w (K, LANE) — weight broadcast along lanes; d (K, block, LANE)
-    # o (block, LANE) = Σ_k w_k · d_k   — one VMEM pass, no HBM intermediate
-    o_ref[...] = jnp.sum(w_ref[...][:, None, :] * d_ref[...], axis=0)
+    # w (K, LANE) fp32 — weight broadcast along lanes; d (K, block, LANE)
+    # o (block, LANE) = Σ_k w_k · d_k   — one VMEM pass, no HBM intermediate.
+    # The product/sum run in fp32 whatever the delta dtype (a bf16 partial
+    # sum rounds away late clients once it outgrows the increments); the
+    # tile is cast back to the wire dtype on write.
+    acc = jnp.sum(w_ref[...].astype(jnp.float32)[:, None, :] *
+                  d_ref[...].astype(jnp.float32), axis=0)
+    o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def weighted_reduce_2d(deltas, weights, interpret=False):
-    """deltas (K, rows, LANE), weights (K,) -> (rows, LANE) = Σ_k w_k·Δ_k."""
+    """deltas (K, rows, LANE), weights (K,) -> (rows, LANE) = Σ_k w_k·Δ_k,
+    accumulated in fp32 and cast on write."""
     k, rows, _ = deltas.shape
-    w2d = jnp.broadcast_to(weights.astype(deltas.dtype)[:, None], (k, LANE))
-    block = _row_block(rows, k, deltas.dtype.itemsize)
+    w2d = jnp.broadcast_to(weights.astype(jnp.float32)[:, None], (k, LANE))
+    # budget the slab at fp32 itemsize: the in-kernel accumulation upcasts
+    block = _row_block(rows, k, max(deltas.dtype.itemsize, 4))
     grid = (pl.cdiv(rows, block),)
     return pl.pallas_call(
         _weighted_reduce_kernel,

@@ -55,6 +55,23 @@ def _wire_dtype(run: RunConfig):
     return jnp.dtype(run.compute_dtype) if mixed else jnp.dtype(run.param_dtype)
 
 
+def _broadcast_inputs(strategy, params, server, fed: FedConfig,
+                      run: RunConfig):
+    """(θ_t, server view, ctx) in the wire dtype: the mixed-precision round
+    broadcasts bf16 (§Perf iteration 7) — shared by ``init_state`` (the
+    delta codec's round-0 reference must match the round-0 broadcast
+    bitwise) and ``train_step``."""
+    compute_dtype = jnp.dtype(run.compute_dtype)
+    mixed = (jnp.dtype(run.param_dtype) == jnp.float32
+             and compute_dtype == jnp.bfloat16)
+    theta_t = T.cast(params, compute_dtype) if mixed else params
+    server_view = server
+    if mixed and "m" in server:
+        server_view = dict(server, m=T.cast(server["m"], compute_dtype))
+    ctx = strategy.client_setup(server_view, theta_t, fed)
+    return theta_t, server_view, ctx, mixed
+
+
 def init_state(rng, mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
     model = get_model(mcfg)
     dtype = jnp.dtype(run.param_dtype)
@@ -63,11 +80,19 @@ def init_state(rng, mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
     state = {"params": params,
              "server": strategy.server_init(params),
              "round": jnp.zeros((), jnp.int32)}
-    if Transport(fed).ef_enabled:
+    transport = Transport(fed)
+    if transport.ef_enabled:
         # mesh-resident per-client EF store (leading axis n_clients); dtype
         # matches the wire the residual is the complement of
         ef_template = T.cast(params, _wire_dtype(run))
         state["clients"] = {"ef": CS.sharded_init(ef_template, fed.n_clients)}
+    if transport.needs_downlink_ref:
+        # the delta codec's broadcast reference lives in the train state
+        # (sharded like the parameters it mirrors) so it survives jit and
+        # rides the pod mesh; the round-0 reference is the initial sync
+        theta_w, _, ctx0, _ = _broadcast_inputs(strategy, params,
+                                                state["server"], fed, run)
+        state["downlink_ref"] = transport.init_downlink_ref(theta_w, ctx0)
     return state
 
 
@@ -187,10 +212,14 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
                 if efs is None:
                     new_ef = jnp.zeros(())   # residual not carried
             w = A.streaming_weight(d, ref, fed.aggregator, fed.drag_lambda)
-            acc = jax.tree.map(lambda a, di: a + w.astype(di.dtype) * di,
-                               acc, d)
+            # Σ w·Δ accumulates in fp32 regardless of the wire dtype: a
+            # bf16 running sum loses the late clients to rounding once the
+            # partial sum's ulp outgrows the increments; cast on write
+            # happens after the cross-pod aggregation below
+            acc = jax.tree.map(
+                lambda a, di: a + w * di.astype(jnp.float32), acc, d)
             return (acc, wsum + w), (l, new_ef)
-        acc0 = (T.zeros_like(theta_t), jnp.zeros(()))
+        acc0 = (T.cast(T.zeros_like(theta_t), jnp.float32), jnp.zeros(()))
         xs = (cbs, ckeys) if efs is None else (cbs, ckeys, efs)
         (acc, wsum), (ls, new_efs) = jax.lax.scan(serial, acc0, xs)
         return acc, wsum, jnp.mean(ls), new_efs
@@ -207,16 +236,8 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         # all-gathers and activation traffic; Δ̄ is upcast before the f32
         # server update, which preserves the momentum-accumulation
         # precision the FedADC recursion needs.
-        mixed = (jnp.dtype(run.param_dtype) == jnp.float32
-                 and compute_dtype == jnp.bfloat16)
-        theta_t = T.cast(theta_master, compute_dtype) if mixed \
-            else theta_master
-        server_ctx_state = state["server"]
-        if mixed and "m" in server_ctx_state:
-            server_ctx_state = dict(server_ctx_state,
-                                    m=T.cast(server_ctx_state["m"],
-                                             compute_dtype))
-        ctx = strategy.client_setup(server_ctx_state, theta_t, fed)
+        theta_t, server_ctx_state, ctx, mixed = _broadcast_inputs(
+            strategy, theta_master, state["server"], fed, run)
         ref = A.reference_direction(server_ctx_state) \
             if fed.aggregator == "drag" else None
         CP, CSn = batch["tokens"].shape[:2]
@@ -225,10 +246,14 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         round_key = jax.random.fold_in(jax.random.PRNGKey(run.seed),
                                        state["round"])
         pod_keys = jax.random.split(round_key, CP)
-        if lossy_down:
-            # clients everywhere train on the broadcast reconstruction
-            theta_t, ctx = transport.broadcast(
-                theta_t, ctx, jax.random.fold_in(round_key, 0xD0))
+        new_dref = None
+        if transport.down is not None:
+            # clients everywhere train on the broadcast reconstruction;
+            # the delta codec's reference state rides the train state
+            dkey = jax.random.fold_in(round_key, 0xD0) if lossy_down \
+                else None
+            theta_t, ctx, new_dref = transport.broadcast(
+                theta_t, ctx, dkey, state.get("downlink_ref"))
         if ef_enabled:
             if client_ids is None:
                 # default identification: slot i of the round is client i
@@ -267,13 +292,19 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             loss = jnp.mean(losses)
         # per-pod weighted means recombine exactly through the shared hook:
         # Δ̄ = Σ_p W_p·Δ̄_p / Σ_p W_p = Σ_i w_i·Δ_i / Σ_i w_i by linearity.
+        # The per-group sums arrive as fp32 accumulators; the mixed round
+        # keeps Δ̄ in f32 for the server update, a pure-low-precision run
+        # casts back to the param dtype on write.
         mean_delta = strategy.server_aggregate(group_means, gweights, fed)
-        if mixed:
-            mean_delta = T.cast(mean_delta, jnp.float32)
+        mean_delta = T.cast(mean_delta,
+                            jnp.float32 if mixed else jnp.dtype(
+                                run.param_dtype))
         new_params, new_server = strategy.server_update(
             state["server"], theta_master, mean_delta, fed)
         new_state = {"params": new_params, "server": new_server,
                      "round": state["round"] + 1}
+        if transport.needs_downlink_ref:
+            new_state["downlink_ref"] = new_dref
         if ef_enabled:
             flat_new = jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), new_efs)

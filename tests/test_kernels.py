@@ -239,3 +239,73 @@ def test_property_topk_select_conserves(n, frac):
     q, r = ops.topk_compress_leaf(v, thresh)
     np.testing.assert_array_equal(np.asarray(q + r), np.asarray(v))
     assert int(jnp.sum(q != 0)) >= min(k, int(jnp.sum(v != 0)))
+
+
+# ---------------------------------------------------------------------------
+# weighted-delta-reduce: fp32 accumulation at bf16 (Pallas ↔ ref ↔ fp64
+# oracle).  Summing K bf16 deltas in bf16 loses the aggregate to rounding
+# once the partial sum's ulp outgrows the increments; both the ref path and
+# the kernel must accumulate in fp32 and cast on write.
+# ---------------------------------------------------------------------------
+class TestWeightedReduceFp32Accumulation:
+    K, N = 96, 4096          # K ≥ 64: bf16 running sums visibly drown here
+
+    def _operands(self):
+        rng = np.random.RandomState(7)
+        # positive values ~1.0 so the partial sum grows monotonically —
+        # the adversarial regime for low-precision accumulation
+        d64 = 1.0 + 0.05 * rng.randn(self.K, self.N)
+        d_bf16 = jnp.asarray(d64, jnp.bfloat16)
+        w = jnp.asarray(rng.uniform(0.2, 1.0, self.K), jnp.float32)
+        # the fp64 oracle consumes the bf16-rounded inputs (the wire dtype
+        # is given; the accumulation precision is what is under test)
+        return d_bf16, w, np.asarray(d_bf16, np.float64), np.asarray(
+            w, np.float64)
+
+    def test_ref_and_pallas_match_fp64_oracle(self):
+        d, w, d64, w64 = self._operands()
+        oracle = np.tensordot(w64, d64, axes=([0], [0]))
+        got_ref = np.asarray(ref.weighted_delta_reduce(d, w), np.float64)
+        got_pal = np.asarray(
+            ops.weighted_delta_reduce({"x": d}, w)["x"], np.float64)
+        # fp32 accumulation + one final bf16 rounding: within 1 bf16 ulp
+        bound = np.abs(oracle) * 2.0 ** -8
+        assert np.all(np.abs(got_ref - oracle) <= bound)
+        assert np.all(np.abs(got_pal - oracle) <= bound)
+        # and Pallas agrees with the ref path to the same resolution
+        np.testing.assert_allclose(got_pal, got_ref, rtol=2.0 ** -8, atol=0)
+
+    def test_bf16_accumulation_would_fail_this_bound(self):
+        """The regression the fp32 fix closes: an in-dtype (bf16) running
+        sum violates the 1-ulp bound the fixed paths satisfy."""
+        d, w, d64, w64 = self._operands()
+        oracle = np.tensordot(w64, d64, axes=([0], [0]))
+        acc = jnp.zeros((self.N,), jnp.bfloat16)
+        for i in range(self.K):                      # the old semantics
+            acc = acc + w[i].astype(jnp.bfloat16) * d[i]
+        bad = np.asarray(acc, np.float64)
+        bound = np.abs(oracle) * 2.0 ** -8
+        assert np.mean(np.abs(bad - oracle) > bound) > 0.5
+
+    def test_weighted_mean_bf16_matches_fp64_oracle(self):
+        """The aggregation entry point (both backends) at bf16."""
+        from repro.federated import aggregation as A
+        d, w, d64, w64 = self._operands()
+        wn64 = w64 / w64.sum()
+        oracle = np.tensordot(wn64, d64, axes=([0], [0]))
+        bound = np.abs(oracle) * 2.0 ** -8 + 1e-7
+        for use_pallas in (False, True):
+            got = np.asarray(
+                A.weighted_mean({"x": d}, w, use_pallas=use_pallas)["x"],
+                np.float64)
+            assert np.all(np.abs(got - oracle) <= bound), use_pallas
+
+    def test_fp32_inputs_unchanged(self):
+        """The fix must not perturb the existing fp32 path."""
+        rng = np.random.RandomState(3)
+        d = jnp.asarray(rng.randn(8, 513), jnp.float32)
+        w = jnp.asarray(rng.uniform(size=8), jnp.float32)
+        got = ops.weighted_delta_reduce({"x": d}, w)["x"]
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.weighted_delta_reduce(d, w)),
+            rtol=1e-6, atol=1e-6)

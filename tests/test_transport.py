@@ -3,7 +3,15 @@ bit-exactness on all three engines, ClientStore gather/scatter round trips
 (host and sharded backends), the sparse top-k wire path vs the dense
 reconstruction oracle, pod-engine top-k+EF residual exactness, measured
 downlink accounting, and the deprecation-shim contract (warn once, engines
-and examples warning-clean)."""
+and examples warning-clean).
+
+The delta-downlink sections gate the momentum-aware reference-coded
+broadcast: ``delta+identity`` bit-identical to the plain broadcast on all
+three engines (the CI engine-parity matrix's second codec axis), the
+per-direction knobs, the stateful reference lifecycle (incl. async
+versioning under staleness and the pod train-state residency), 0-byte
+derived ctx for FedADC, dispatch-not-completion downlink accounting, the
+(params, None) broadcast round trip, and the wire-keyed shim cache."""
 import pathlib
 import warnings
 
@@ -24,8 +32,10 @@ from repro.federated import store as CS
 from repro.federated.async_engine import AsyncFederatedSimulator
 from repro.federated.protocol import RoundProtocol
 from repro.federated.simulator import FederatedSimulator, SimConfig
-from repro.federated.transport import (SparseLeaf, SparseTopKCodec,
-                                       Transport, make_codec)
+from repro.federated import compression as C
+from repro.federated.transport import (DeltaDownlinkCodec, SparseLeaf,
+                                       SparseTopKCodec, Transport,
+                                       make_codec, shim_transport)
 
 
 @pytest.fixture(scope="module")
@@ -144,8 +154,384 @@ class TestIdentityTransportPod:
 
 
 # ---------------------------------------------------------------------------
-# ClientStore: gather/scatter round trips on both backends
+# delta (reference-coded) downlink: the lossless configuration is
+# bit-identical to the plain broadcast on every engine — the CI
+# engine-parity matrix's downlink_compressor ∈ {none, delta+identity} axis
 # ---------------------------------------------------------------------------
+class TestDeltaTransportSync:
+    def test_simulator_bit_exact(self, data):
+        x, y, xt, yt, parts = data
+        a = FederatedSimulator(_fed(), _sim(), x, y, xt, yt, parts)
+        b = FederatedSimulator(_fed(downlink_compressor="delta"),
+                               _sim(), x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+
+    def test_downlink_bytes_steady_state_1x_theta(self, data):
+        """FedADC under the Δm̄ codec: round 0 pays the full (θ, m̄) initial
+        sync, every later round pays θ-delta bytes only (the derived ctx is
+        0 bytes) — so measured downlink tends to 1× raw θ while the raw
+        baseline stays at 2×."""
+        x, y, xt, yt, parts = data
+        R = 4
+        s = FederatedSimulator(_fed(downlink_compressor="delta"), _sim(R),
+                               x, y, xt, yt, parts)
+        s.run()
+        per_up = s.transport._up_raw            # raw θ bytes per client
+        clients = s.fed.clients_per_round
+        assert s.downlink_bytes_raw == R * clients * 2 * per_up
+        assert s.downlink_bytes == clients * (2 + (R - 1)) * per_up
+        # steady state: one more round costs exactly 1× θ per client
+        assert s.transport._down_nbytes == per_up
+
+    def test_lossy_delta_converges_like_plain(self, data):
+        """delta+qsgd8 trains (the reference self-corrects coding error);
+        the run completes with finite loss and nonzero accuracy."""
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(
+            _fed(downlink_compressor="delta+qsgd", downlink_qsgd_bits=8),
+            _sim(), x, y, xt, yt, parts)
+        hist = s.run()
+        assert np.isfinite(hist[-1]["loss"])
+        assert s.downlink_bytes < s.downlink_bytes_raw
+
+
+class TestDeltaTransportAsync:
+    def test_async_bit_exact(self, data):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        a = AsyncFederatedSimulator(_fed(), _sim(), het, x, y, xt, yt, parts)
+        b = AsyncFederatedSimulator(_fed(downlink_compressor="delta"),
+                                    _sim(), het, x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+        assert b.downlink_bytes < b.downlink_bytes_raw
+
+    def test_downlink_counts_dispatches_not_completions(self, data):
+        """Clients whose uploads are dropped still received the broadcast:
+        measured downlink bytes count dispatch events (version-0 dispatches
+        at the full-resync rate, later ones at the delta rate), uplink
+        bytes count arrivals only."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, drop_prob=0.4, seed=5)
+        s = AsyncFederatedSimulator(_fed(downlink_compressor="delta"),
+                                    _sim(4), het, x, y, xt, yt, parts)
+        s.run()
+        disp = [e for e in s.event_log if e[0] == "dispatch"]
+        arr = [e for e in s.event_log if e[0] == "arrive"]
+        drops = [e for e in s.event_log if e[0] == "drop"]
+        assert drops, "drop_prob=0.4 must actually drop uploads"
+        assert len(disp) > len(arr)
+        t = s.transport
+        assert s.uplink_bytes_raw == len(arr) * t._up_raw
+        assert s.downlink_bytes_raw == len(disp) * t._down_raw
+        n0 = sum(1 for e in disp if e[3] == 0)     # version-0 dispatches
+        assert s.downlink_bytes == \
+            n0 * t._down_raw + (len(disp) - n0) * t._down_nbytes
+
+    def test_reconstruction_matches_dispatch_version_under_staleness(
+            self, data):
+        """Δm̄-codec reconstruction under staleness > 0: one broadcast per
+        server version (the reference advances exactly once per version),
+        every dispatch at version v hands out that same reconstruction, and
+        a stale delta was therefore computed against the reference version
+        it was dispatched with, not the one current at arrival."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, speed_dist="bimodal",
+                           straggler_frac=0.4, straggler_slowdown=4.0,
+                           seed=0)
+        eng = AsyncFederatedSimulator(
+            _fed(downlink_compressor="delta+qsgd", downlink_qsgd_bits=8,
+                 buffer_k=1), _sim(6), het, x, y, xt, yt, parts)
+        rec = {}
+        orig = eng._broadcast
+
+        def spy():
+            params_now = jax.tree.map(np.asarray, eng.params)
+            pw, cx = orig()
+            v = eng.version
+            got = jax.tree.map(np.asarray, pw)
+            if v in rec:
+                # cached: every dispatch at version v gets the same wire
+                _assert_trees_equal(rec[v]["pw"], got, exact=True)
+            else:
+                rec[v] = {"pw": got, "params": params_now,
+                          "ref": jax.tree.map(np.asarray, eng._down_ref[0])}
+            return pw, cx
+
+        eng._broadcast = spy
+        eng.run()
+        assert max(eng.staleness_seen) > 0, "fleet must actually go stale"
+        disp_versions = {e[3] for e in eng.event_log if e[0] == "dispatch"}
+        assert set(rec) == disp_versions
+        for v, r in rec.items():
+            # the reference advanced to this version's reconstruction ...
+            _assert_trees_equal(r["ref"], r["pw"], exact=True)
+            if v > 0:
+                # ... which is genuinely the lossy wire, not the raw θ_v
+                diff = max(float(np.max(np.abs(a - b))) for a, b in zip(
+                    jax.tree.leaves(r["pw"]), jax.tree.leaves(r["params"])))
+                assert diff > 0
+
+
+class TestDeltaTransportPod:
+    def _setup(self, **fed_kw):
+        from repro.launch.mesh import make_host_mesh
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="float32")
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 2, 2, 2, 32))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        kw = dict(strategy="fedadc", clients_per_round=2, local_steps=2,
+                  eta=0.05)
+        kw.update(fed_kw)
+        return make_host_mesh(), mcfg, run, batch, FedConfig(**kw)
+
+    def test_pod_bit_exact(self):
+        from repro.launch.train import init_state, make_train_step
+        mesh, mcfg, run, batch, fed_plain = self._setup()
+        _, _, _, _, fed_delta = self._setup(downlink_compressor="delta")
+        with mesh:
+            sa = init_state(jax.random.PRNGKey(0), mcfg, fed_plain, run)
+            sd = init_state(jax.random.PRNGKey(0), mcfg, fed_delta, run)
+            assert "downlink_ref" in sd and "downlink_ref" not in sa
+            step_a = make_train_step(mcfg, fed_plain, run)
+            step_d = make_train_step(mcfg, fed_delta, run)
+            # two rounds: the reference must thread through the train state
+            for _ in range(2):
+                sa, _ = step_a(sa, batch)
+                sd, _ = step_d(sd, batch)
+            _assert_trees_equal(sa["params"], sd["params"], exact=True)
+
+    def test_pod_ref_tracks_broadcast(self):
+        """After round t the stored reference is the round-t broadcast
+        (θ at broadcast time), i.e. the tree the clients now hold."""
+        from repro.launch.train import init_state, make_train_step
+        mesh, mcfg, run, batch, fed = self._setup(
+            downlink_compressor="delta")
+        with mesh:
+            s0 = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+            step = make_train_step(mcfg, fed, run)
+            s1, _ = step(s0, batch)
+            s2, _ = step(s1, batch)
+            _assert_trees_equal(s2["downlink_ref"][0], s1["params"],
+                                exact=True)
+
+    def test_pod_delta_ref_lowers_through_dryrun_inputs(self):
+        """state_inputs grows the sharded reference and the jit'd round
+        still lowers on the (1×1 host) mesh."""
+        from repro.launch import inputs as I
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import make_train_step
+        from repro.configs.base import ShapeConfig
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        fed = FedConfig(strategy="fedadc", clients_per_round=2,
+                        local_steps=2, eta=0.05,
+                        downlink_compressor="delta+topk",
+                        downlink_topk_frac=0.1)
+        run = RunConfig(remat="none")
+        shape = ShapeConfig("train_small", seq_len=64, global_batch=16,
+                            kind="train")
+        mesh = make_host_mesh()
+        with mesh:
+            state_sds = I.state_inputs(mcfg, fed, run, mesh)
+            assert "downlink_ref" in state_sds
+            batch_sds = I.train_inputs(mcfg, shape, fed, mesh, False)
+            step = make_train_step(mcfg, fed, run)
+            compiled = jax.jit(step).lower(state_sds, batch_sds).compile()
+            assert compiled.cost_analysis() is not None
+
+
+# ---------------------------------------------------------------------------
+# DeltaDownlinkCodec unit level: per-direction knobs, reference lifecycle,
+# momentum-aware 0-byte ctx
+# ---------------------------------------------------------------------------
+class TestDeltaDownlinkCodec:
+    def test_per_direction_knobs_fall_back_to_uplink(self):
+        t = _tree()
+        tpl = (t, {})
+        shared = Transport(_fed(downlink_compressor="topk", topk_frac=0.2))
+        split = Transport(_fed(downlink_compressor="topk", topk_frac=0.2,
+                               downlink_topk_frac=0.05))
+        assert shared.downlink_wire_nbytes(tpl) == \
+            Transport(_fed(compressor="topk", topk_frac=0.2)
+                      ).uplink_wire_nbytes(t)
+        assert split.downlink_wire_nbytes(tpl) < \
+            shared.downlink_wire_nbytes(tpl)
+        # uplink side unaffected by the downlink override
+        assert split.uplink_wire_nbytes(t) == shared.uplink_wire_nbytes(t)
+
+    def test_downlink_qsgd_bits_override(self):
+        tpl = (_tree(), {})
+        wide = Transport(_fed(downlink_compressor="qsgd", qsgd_bits=8))
+        narrow = Transport(_fed(downlink_compressor="qsgd", qsgd_bits=8,
+                                downlink_qsgd_bits=2))
+        assert narrow.downlink_wire_nbytes(tpl) < \
+            wide.downlink_wire_nbytes(tpl)
+
+    def test_delta_rejected_on_uplink(self):
+        with pytest.raises(ValueError, match="downlink"):
+            Transport(_fed(compressor="delta"))
+
+    @pytest.mark.parametrize("name", ["delta+none", "delta+", "delta+delta",
+                                      "delta+topk9"])
+    def test_unknown_delta_inner_rejected(self, name):
+        with pytest.raises(ValueError, match="unknown"):
+            Transport(_fed(downlink_compressor=name))
+
+    def test_ctx_costs_zero_bytes_for_fedadc(self):
+        """Momentum-aware accounting: FedADC's m̄ is an exact scalar image
+        of the θ-delta, so the delta-coded ctx ships 0 bytes; a strategy
+        without the hook (FedProx broadcasts θ_t itself) pays full freight."""
+        p = _tree()
+        adc = Transport(_fed(downlink_compressor="delta"))
+        assert adc.downlink_wire_nbytes((p, {"m_bar": p})) == C.raw_nbytes(p)
+        prox = Transport(_fed("fedprox", downlink_compressor="delta"))
+        assert prox.downlink_wire_nbytes((p, {"theta_t": p})) == \
+            2 * C.raw_nbytes(p)
+        # lossy inner composes on the θ-delta only
+        lossy = Transport(_fed(downlink_compressor="delta+topk",
+                               downlink_topk_frac=0.1))
+        assert lossy.downlink_wire_nbytes((p, {"m_bar": p})) == \
+            C.TopKCompressor(0.1).wire_nbytes(p)
+
+    def test_lossy_reference_lifecycle(self):
+        """ref_t = reconstruction_t; clients accumulate ref + decoded delta;
+        the derived ctx is the exact scalar image of the decoded θ-delta."""
+        fed = _fed(downlink_compressor="delta+qsgd", downlink_qsgd_bits=8)
+        t = Transport(fed)
+        assert t.needs_downlink_ref and t.down.lossy
+        p0 = _tree(0)
+        ctx0 = {"m_bar": T.zeros_like(p0)}
+        ref0 = t.init_downlink_ref(p0, ctx0)
+        p1 = T.add(p0, T.scale(_tree(1), 0.01))
+        ctx1 = {"m_bar": T.scale(_tree(2), 0.1)}
+        pw, cw, ref1 = t.broadcast(p1, ctx1, jax.random.PRNGKey(3), ref0)
+        # reconstruction is close to—but not bitwise—the true tree
+        err = float(T.global_norm(T.sub(pw, p1)))
+        assert 0 < err < 0.05 * float(T.global_norm(p1))
+        # new reference IS the reconstruction the clients now hold
+        _assert_trees_equal(ref1[0], pw, exact=True)
+        _assert_trees_equal(ref1[1], cw, exact=True)
+        # momentum-aware ctx: m̄ = −β_l/(H·α·η) · (decoded θ-delta)
+        k = -fed.beta_local / (fed.local_steps * fed.alpha * fed.eta)
+        expect = T.scale(T.sub(pw, p0), k)
+        _assert_trees_equal(cw, {"m_bar": expect}, exact=False, atol=1e-5)
+
+    def test_round0_delta_is_exact(self):
+        """The round-0 reference is the initial sync, so the first lossy
+        wire delta is exactly zero and clients start from the true θ_0."""
+        fed = _fed(downlink_compressor="delta+topk", downlink_topk_frac=0.1)
+        t = Transport(fed)
+        p0, ctx0 = _tree(0), {"m_bar": T.zeros_like(_tree(0))}
+        ref0 = t.init_downlink_ref(p0, ctx0)
+        pw, cw, _ = t.broadcast(p0, ctx0, jax.random.PRNGKey(0), ref0)
+        _assert_trees_equal(pw, p0, exact=True)
+        _assert_trees_equal(cw, ctx0, exact=True)
+
+    def test_stateless_codecs_need_no_ref(self):
+        t = Transport(_fed(downlink_compressor="identity"))
+        assert not t.needs_downlink_ref
+        assert t.init_downlink_ref(_tree(), {}) is None
+        p = _tree()
+        pw, cw, ref = t.broadcast(p, {})
+        assert pw is p and ref is None
+
+    def test_delta_requires_ref(self):
+        t = Transport(_fed(downlink_compressor="delta"))
+        with pytest.raises(ValueError, match="ref"):
+            t.broadcast(_tree(), {})
+
+
+# ---------------------------------------------------------------------------
+# broadcast with ctx=None (FedAvg's empty context): no phantom leaves, 0
+# downlink bytes for the ctx side
+# ---------------------------------------------------------------------------
+class TestBroadcastCtxNone:
+    @pytest.mark.parametrize("codec", ["topk", "qsgd"])
+    def test_lossy_roundtrip_preserves_none(self, codec):
+        t = Transport(_fed("fedavg", downlink_compressor=codec))
+        p = _tree(4)
+        pw, cw, _ = t.broadcast(p, None, jax.random.PRNGKey(0))
+        assert cw is None
+        assert jax.tree.structure((pw, cw)) == jax.tree.structure((p, None))
+        assert len(jax.tree.leaves((pw, cw))) == len(jax.tree.leaves(p))
+        # the codec actually engaged on the params side
+        assert float(T.global_norm(T.sub(pw, p))) > 0
+
+    def test_zeros_like_keeps_none_empty(self):
+        z = T.zeros_like((_tree(), None))
+        assert z[1] is None
+        assert len(jax.tree.leaves(z)) == len(jax.tree.leaves(_tree()))
+
+    def test_templates_count_none_ctx_zero(self):
+        p = _tree()
+        for fed in (_fed("fedavg"),
+                    _fed("fedavg", downlink_compressor="topk"),
+                    _fed("fedavg", downlink_compressor="qsgd"),
+                    _fed("fedavg", downlink_compressor="delta")):
+            t = Transport(fed)
+            with_none = t.downlink_wire_nbytes((p, None))
+            params_only = t.downlink_wire_nbytes((p, {}))
+            assert with_none == params_only > 0, fed.downlink_compressor
+        t = Transport(_fed("fedavg", downlink_compressor="identity"))
+        t.set_wire_templates(p, (p, None))
+        assert t._down_raw == C.raw_nbytes(p)
+        t.account_downlink(3)
+        assert t.downlink_bytes == 3 * C.raw_nbytes(p)
+
+    def test_delta_codec_threads_none_ctx(self):
+        t = Transport(_fed("fedavg", downlink_compressor="delta+qsgd"))
+        p0 = _tree(0)
+        ref = t.init_downlink_ref(p0, None)
+        p1 = T.add(p0, T.scale(_tree(1), 0.01))
+        pw, cw, ref1 = t.broadcast(p1, None, jax.random.PRNGKey(0), ref)
+        assert cw is None and ref1[1] is None
+        assert float(T.global_norm(T.sub(pw, p0))) > 0
+
+
+# ---------------------------------------------------------------------------
+# shim cache: keyed on the wire-relevant fields, not the whole config
+# ---------------------------------------------------------------------------
+class TestShimTransportCache:
+    def test_non_wire_fields_share_one_instance(self):
+        a = _fed(compressor="topk", topk_frac=0.1, eta=0.01)
+        b = _fed(compressor="topk", topk_frac=0.1, eta=0.9)
+        assert shim_transport(a) is shim_transport(b)
+
+    def test_flipping_compressor_changes_served_codec(self):
+        a = _fed(compressor="topk", topk_frac=0.1)
+        b = _fed(compressor="qsgd", qsgd_bits=4)
+        ta, tb = shim_transport(a), shim_transport(b)
+        assert ta is not tb
+        assert ta.up.name == "topk" and tb.up.name == "qsgd"
+        # and the served codec reflects the knob, not a stale entry
+        assert shim_transport(_fed(compressor="topk", topk_frac=0.1)) is ta
+
+    def test_wire_knob_variants_get_distinct_codecs(self):
+        a = shim_transport(_fed(compressor="topk", topk_frac=0.1))
+        b = shim_transport(_fed(compressor="topk", topk_frac=0.2))
+        assert a is not b and a.up._comp.frac != b.up._comp.frac
+
+    def test_mutable_config_rejected(self):
+        import dataclasses
+
+        @dataclasses.dataclass
+        class MutableFed:
+            compressor: str = "topk"
+            topk_frac: float = 0.1
+            qsgd_bits: int = 8
+            error_feedback: bool = True
+            sparse_uplink: bool = False
+            use_pallas: bool = False
+
+        with pytest.raises(TypeError, match="frozen"):
+            shim_transport(MutableFed())
+
+
+
 class TestClientStore:
     def test_host_gather_initialises_then_round_trips(self):
         store = CS.ClientStore()

@@ -12,10 +12,15 @@ not be gated orders of magnitude tighter than the quantities they were
 computed from.
 
 ``--require`` names dotted paths (e.g. ``headline.downlink_measured``,
-``async_cells``) that must exist and be truthy/non-empty in the FRESH
-output of every compared pair — the walk itself is committed-driven, so
-this is how the gate pins *new* sections a refactor promised (a fresh file
-that silently stopped emitting them would otherwise still pass).
+``async_cells``, ``drift.fedadc_none``) that must exist and be
+truthy/non-empty in the FRESH output of every compared pair — the walk
+itself is committed-driven, so this is how the gate pins *new* sections a
+refactor promised (a fresh file that silently stopped emitting them would
+otherwise still pass).  Everything *under* a required path is additionally
+checked to be well-formed — numeric leaves must be finite (a drift metric
+that collapsed to NaN/inf is a regression even though NaN != NaN would
+slip through an equality diff) — while wall-clock keys inside the section
+stay skipped.
 
 Usage:  python benchmarks/check_regression.py fresh.json:committed.json \\
             [--tol 0.2] [--atol 0.01] [--require path ...]
@@ -25,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import re
 import sys
 
@@ -69,6 +75,21 @@ def _walk(fresh, committed, path, tol, atol, errors):
             errors.append(f"{path}: {fresh!r} != committed {committed!r}")
 
 
+def _check_finite(node, path, errors):
+    """Numeric leaves under a required section must be finite; wall-clock
+    keys are skipped exactly as in the committed-driven walk."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if SKIP_KEY.search(str(k)):
+                continue
+            _check_finite(v, f"{path}.{k}", errors)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _check_finite(v, f"{path}[{i}]", errors)
+    elif isinstance(node, float) and not math.isfinite(node):
+        errors.append(f"required path {path}: non-finite value {node!r}")
+
+
 def _check_required(fresh, paths, errors):
     for dotted in paths:
         node = fresh
@@ -86,6 +107,8 @@ def _check_required(fresh, paths, errors):
             errors.append(f"required path {dotted!r} is empty")
         elif node is False or node is None:
             errors.append(f"required path {dotted!r} is {node!r}")
+        else:
+            _check_finite(node, dotted, errors)
 
 
 def compare(fresh_path: str, committed_path: str, tol: float = 0.2,

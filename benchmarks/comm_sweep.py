@@ -37,6 +37,7 @@ import numpy as np
 
 from benchmarks.common import (HeteroConfig, dataset, emit, partitions,
                                run_fl, run_fl_async)
+from repro.telemetry import Telemetry
 
 STRATEGIES = ("fedavg", "slowmo", "fedadc")
 COMPRESSORS = (
@@ -95,16 +96,36 @@ def _cell(name_kv, r):
     return cell
 
 
+def _drift_cell(tel: Telemetry):
+    """First/last points of each per-round drift metric — the curve's
+    endpoints are the deterministic, tolerance-friendly summary the CI
+    gate can diff (the full curve rides the JSONL export, not the bench
+    JSON)."""
+    dc = list(tel.drift_curve)
+    first, last = dc[0], dc[-1]
+    out = {}
+    for k in sorted(last):
+        if k == "round":
+            continue
+        out[f"{k}_first"] = round(float(first.get(k, last[k])), 5)
+        out[f"{k}_last"] = round(float(last[k]), 5)
+    out["rounds_recorded"] = len(dc)
+    return out
+
+
 def sweep(rounds=90, n_clients=20, seed=0):
     data = dataset()
     parts = partitions(data[1], n_clients, "sort", 2, seed=seed)
-    cells = []
+    cells, drift = [], {}
     for strat in STRATEGIES:
         for cname, extra in COMPRESSORS:
+            tel = Telemetry(engine="sim")
             r = run_fl(strat, parts, data, rounds=rounds,
-                       n_clients=n_clients, seed=seed, extra_fed=extra)
+                       n_clients=n_clients, seed=seed, extra_fed=extra,
+                       telemetry=tel)
             cells.append(_cell({"strategy": strat, "compressor": cname}, r))
-    return cells
+            drift[f"{strat}_{cname}"] = _drift_cell(tel)
+    return cells, drift
 
 
 def _down_ratio(cell):
@@ -134,24 +155,25 @@ def downlink_sweep(base_cell, rounds=90, n_clients=20, seed=0):
 def async_sweep(rounds=80, n_clients=20, seed=0):
     data = dataset()
     parts = partitions(data[1], n_clients, "sort", 2, seed=seed)
-    cells = []
+    cells, drift = [], {}
     for cname, comp in ASYNC_KNOBS:
         for sname, stale in ASYNC_STALENESS:
             extra = dict(comp)
             extra.update(stale)
+            tel = Telemetry(engine="async")
             r = run_fl_async("fedadc", parts, data, hetero=ASYNC_HETERO,
                              rounds=rounds, n_clients=n_clients, seed=seed,
-                             extra_fed=extra)
+                             extra_fed=extra, telemetry=tel)
             cell = _cell({"compressor": cname, "staleness": sname}, r)
-            cell["mean_staleness"] = round(
-                float(np.mean(r["sim"].staleness_seen)), 3)
+            cell["mean_staleness"] = round(r["sim"].staleness_hist.mean(), 3)
             cells.append(cell)
-    return cells
+            drift[f"async_{cname}_{sname}"] = _drift_cell(tel)
+    return cells, drift
 
 
 def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
     rows = rows if rows is not None else []
-    cells = sweep(rounds=rounds)
+    cells, drift = sweep(rounds=rounds)
     by = {(c["strategy"], c["compressor"]): c for c in cells}
     for c in cells:
         rows.append(emit(
@@ -160,7 +182,8 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
             f"acc={c['acc']};up_MB={c['uplink_bytes']/2**20:.2f};"
             f"down_MB={c['downlink_bytes']/2**20:.2f};"
             f"reduction={c['bytes_reduction']:.2f}x"))
-    async_cells = async_sweep(rounds=async_rounds)
+    async_cells, async_drift = async_sweep(rounds=async_rounds)
+    drift.update(async_drift)
     for c in async_cells:
         rows.append(emit(
             f"comm_sweep.async.fedadc.{c['compressor']}.{c['staleness']}",
@@ -175,6 +198,12 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
             c["us_per_round"],
             f"acc={c['acc']};down_MB={c['downlink_bytes']/2**20:.2f};"
             f"down_vs_up_raw={c['downlink_vs_uplink_raw']:.3f}x"))
+    d = drift["fedadc_none"]
+    rows.append(emit(
+        "comm_sweep.drift.fedadc_none", 0,
+        f"disp_last={d['delta_dispersion_last']};"
+        f"align_last={d['momentum_alignment_last']};"
+        f"norm_last={d['update_norm_last']}"))
     base = by[("fedadc", "none")]
     topk = by[("fedadc", "topk10_ef")]
     acc_gap = base["acc"] - topk["acc"]
@@ -196,6 +225,9 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
         "cells": cells,
         "async_cells": async_cells,
         "downlink_cells": downlink_cells,
+        # per-round in-jit drift diagnostics (curve endpoints; underscore
+        # keys so the CI --require gate can address them as dotted paths)
+        "drift": drift,
         "headline": {
             "fedadc_acc_uncompressed": base["acc"],
             "fedadc_acc_topk10_ef": topk["acc"],

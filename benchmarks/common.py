@@ -43,7 +43,7 @@ def run_fl(strategy, parts, data, *, rounds=60, n_clients=20,
            clients_per_round=4, local_steps=8, eta=0.02, beta=0.7,
            batch_size=32, selector="random", distill=False,
            n_classes=10, model="cnn", seed=0, eval_every=None,
-           extra_fed=None) -> Dict:
+           extra_fed=None, telemetry=None) -> Dict:
     x, y, xt, yt = data
     fed_kw = dict(strategy=strategy, local_steps=local_steps,
                   clients_per_round=clients_per_round, n_clients=n_clients,
@@ -55,7 +55,8 @@ def run_fl(strategy, parts, data, *, rounds=60, n_clients=20,
     sim = SimConfig(model=model, n_classes=n_classes, batch_size=batch_size,
                     rounds=rounds, eval_every=eval_every or rounds,
                     cnn_width=8, selector=selector, seed=seed)
-    s = FederatedSimulator(fed, sim, x, y, xt, yt, parts)
+    s = FederatedSimulator(fed, sim, x, y, xt, yt, parts,
+                           telemetry=telemetry)
     t0 = time.time()
     hist = s.run()
     wall = time.time() - t0
@@ -66,7 +67,7 @@ def run_fl(strategy, parts, data, *, rounds=60, n_clients=20,
 def run_fl_async(strategy, parts, data, *, hetero: HeteroConfig, rounds=60,
                  n_clients=20, clients_per_round=4, local_steps=8, eta=0.02,
                  beta=0.7, batch_size=32, n_classes=10, model="cnn", seed=0,
-                 extra_fed=None) -> Dict:
+                 extra_fed=None, telemetry=None) -> Dict:
     """run_fl's semi-async twin: the virtual-clock engine under a
     heterogeneous fleet, with the same calibrated miniature."""
     x, y, xt, yt = data
@@ -78,7 +79,8 @@ def run_fl_async(strategy, parts, data, *, hetero: HeteroConfig, rounds=60,
     fed = FedConfig(**fed_kw)
     sim = SimConfig(model=model, n_classes=n_classes, batch_size=batch_size,
                     rounds=rounds, eval_every=rounds, cnn_width=8, seed=seed)
-    s = AsyncFederatedSimulator(fed, sim, hetero, x, y, xt, yt, parts)
+    s = AsyncFederatedSimulator(fed, sim, hetero, x, y, xt, yt, parts,
+                                telemetry=telemetry)
     t0 = time.time()
     hist = s.run()
     wall = time.time() - t0

@@ -22,6 +22,9 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   comm_sweep         — accuracy-vs-uplink-bytes frontier, strategy ×
                        compressor on the non-IID benchmark (emits
                        BENCH_comm.json)
+  telemetry_bench    — telemetry-enabled vs disabled sync rounds: the
+                       DESIGN.md §Telemetry ≤5% overhead contract,
+                       measured (emits BENCH_telemetry.json)
 """
 import argparse
 import time
@@ -37,7 +40,7 @@ def main() -> None:
                             fig1_acceleration, fig2_robustness, fig5_scale,
                             fig7_personalization, kernels_bench, lm_round,
                             roofline_report, serving_bench, straggler_bench,
-                            table1_sota)
+                            table1_sota, telemetry_bench)
     mods = {
         "kernels_bench": kernels_bench,
         "comm_load": comm_load,
@@ -53,6 +56,7 @@ def main() -> None:
         "ablation_beta": ablation_beta,
         "straggler_bench": straggler_bench,
         "serving_bench": serving_bench,
+        "telemetry_bench": telemetry_bench,
     }
     picked = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")

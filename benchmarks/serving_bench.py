@@ -27,7 +27,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.base import ModelConfig
 from repro.models.registry import get_model
-from repro.serving import SchedulerConfig, ServingEngine
+from repro.serving import SchedulerConfig, ServingEngine, latency_summary
 
 TINY = ModelConfig(arch_id="serving-bench-tiny", n_layers=2, d_model=128,
                    n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=512,
@@ -52,15 +52,15 @@ def run_level(params, prompts, n_slots, prefill_chunk=16):
     outs = eng.run()
     wall = time.perf_counter() - t0
     tokens = sum(len(o.tokens) for o in outs)
-    lats = [o.latency for o in outs]
     return {
         "n_slots": n_slots,
         "n_requests": len(prompts),
         "gen_tokens": tokens,
         "wall_s": round(wall, 3),
         "tokens_per_s": round(tokens / wall, 1),
-        "p50_latency_s": round(float(np.percentile(lats, 50)), 3),
-        "p95_latency_s": round(float(np.percentile(lats, 95)), 3),
+        # TTFT/ITL/e2e percentiles from the shared telemetry helper — the
+        # same summary the engine's telemetry `summary` event reports
+        "latency": latency_summary(outs),
         "engine_steps": eng.n_steps,
     }, outs
 
@@ -104,10 +104,13 @@ def main(rows=None, n_requests=16, levels=(1, 2, 4, 8),
         res, _ = run_level(params, prompts, n_slots)
         results.append(res)
         us_per_tok = res["wall_s"] / res["gen_tokens"] * 1e6
+        lat = res["latency"]
         rows.append(emit(f"serving.slots{n_slots}.tokens_per_s", us_per_tok,
                          res["tokens_per_s"]))
         rows.append(emit(f"serving.slots{n_slots}.p50_p95_s", us_per_tok,
-                         f"{res['p50_latency_s']}/{res['p95_latency_s']}"))
+                         f"{lat['e2e_s']['p50']}/{lat['e2e_s']['p95']}"))
+        rows.append(emit(f"serving.slots{n_slots}.ttft_itl_p50_s", us_per_tok,
+                         f"{lat['ttft_s']['p50']}/{lat['itl_s']['p50']}"))
     base = results[0]["tokens_per_s"]
     peak = results[-1]["tokens_per_s"]
     speedup = peak / base

@@ -56,7 +56,7 @@ def main(rows=None):
     speedup = t_sync / t_semi if t_semi > 0 else float("nan")
     rows.append(emit("straggler.semi_vs_sync_speedup", 0, f"{speedup:.2f}x"))
     rows.append(emit("straggler.semi.max_staleness", 0,
-                     max(eng.staleness_seen)))
+                     eng.staleness_hist.max))
     return rows
 
 

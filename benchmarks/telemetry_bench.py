@@ -1,0 +1,74 @@
+"""Telemetry overhead bench: the §Telemetry ≤5% contract, measured.
+
+Runs the same synchronous FedADC configuration twice — telemetry disabled
+(the default) and enabled with in-jit drift diagnostics + span tracing —
+and compares wall-clock per round after a shared warmup.  The enabled run
+pays exactly one extra host fetch per round (the metric scalar tree) and a
+handful of in-jit reductions; the bench asserts the measured overhead
+stays within the documented 5% budget and emits ``BENCH_telemetry.json``
+for the CI bench-smoke gate (``overhead_le_5pct`` is the committed
+boolean; the raw ratio rides a wall-clock-named key the regression walk
+skips).
+
+Also sanity-checks the contract's other half while it is at it: the
+enabled and disabled runs must produce identical final accuracy — the
+observability path is not allowed to touch the numerics.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import dataset, emit, partitions, run_fl
+from repro.telemetry import Telemetry
+
+MAX_OVERHEAD = 0.05
+
+
+def _timed_run(parts, data, rounds, warmup, telemetry):
+    # one throwaway run compiles the round/eval functions for this config
+    # (jit caches are keyed on the traced program, which differs between
+    # the metric and no-metric round functions)
+    run_fl("fedadc", parts, data, rounds=warmup, n_clients=20, seed=0,
+           telemetry=Telemetry(engine="sim") if telemetry else None)
+    t0 = time.perf_counter()
+    r = run_fl("fedadc", parts, data, rounds=rounds, n_clients=20, seed=0,
+               telemetry=Telemetry(engine="sim") if telemetry else None)
+    return time.perf_counter() - t0, r
+
+
+def main(rows=None, rounds=40, warmup=4, out_json="BENCH_telemetry.json"):
+    rows = rows if rows is not None else []
+    data = dataset()
+    parts = partitions(data[1], 20, "sort", 2, seed=0)
+    wall_off, r_off = _timed_run(parts, data, rounds, warmup, False)
+    wall_on, r_on = _timed_run(parts, data, rounds, warmup, True)
+    ratio = wall_on / wall_off
+    overhead = ratio - 1.0
+    rows.append(emit("telemetry.sync_round_overhead",
+                     wall_on / rounds * 1e6, f"{overhead:+.2%}"))
+    identical = bool(r_on["acc"] == r_off["acc"])
+    rows.append(emit("telemetry.enabled_acc_identical", 0, identical))
+    report = {
+        "rounds": rounds,
+        "wall_ratio_on_vs_off": round(ratio, 4),
+        "overhead_le_5pct": bool(overhead <= MAX_OVERHEAD),
+        "enabled_acc_identical": identical,
+    }
+    with open(out_json, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_json}")
+    assert identical, "telemetry-enabled run changed the accuracy"
+    assert overhead <= MAX_OVERHEAD, (
+        f"telemetry overhead {overhead:+.2%} exceeds the documented "
+        f"{MAX_OVERHEAD:.0%} budget")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--out", default="BENCH_telemetry.json")
+    args = ap.parse_args()
+    main(rounds=args.rounds, out_json=args.out)

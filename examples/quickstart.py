@@ -4,15 +4,27 @@ Reproduces the paper's core claim in miniature: under skewed client data
 (sort-and-partition, s=2), embedding the server momentum into the local
 iterations both accelerates training and controls client drift.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--telemetry-jsonl out.jsonl]
+
+``--telemetry-jsonl`` turns on per-round drift diagnostics (delta
+dispersion, momentum alignment, update norm) and streams every telemetry
+event to the given JSONL file — the CI telemetry-smoke job validates that
+export against the schema.
 """
+import argparse
+
 from repro.configs.base import FedConfig
 from repro.data.partition import sort_and_partition
 from repro.data.synthetic import make_image_dataset
 from repro.federated.simulator import FederatedSimulator, SimConfig
+from repro.telemetry import Telemetry
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--telemetry-jsonl", default=None,
+                    help="enable telemetry and write events to this file")
+    args = ap.parse_args()
     x, y, xt, yt = make_image_dataset(3000, 600, n_classes=10,
                                       image_size=16, noise=0.6, seed=0)
     parts = sort_and_partition(y, n_clients=20, s=2, seed=0)
@@ -21,12 +33,16 @@ def main():
     print(f"{'round':>6} " + "".join(f"{s:>10}" for s in
                                      ("fedavg", "fedadc")))
     histories = {}
+    sink = open(args.telemetry_jsonl, "w") if args.telemetry_jsonl else None
     for strat, eta in (("fedavg", 0.05), ("fedadc", 0.01)):
         fed = FedConfig(strategy=strat, local_steps=8, clients_per_round=4,
                         n_clients=20, eta=eta, beta_global=0.7,
                         beta_local=0.7)
-        s = FederatedSimulator(fed, sim, x, y, xt, yt, parts)
+        tel = Telemetry(jsonl=sink, engine="sim") if sink else None
+        s = FederatedSimulator(fed, sim, x, y, xt, yt, parts, telemetry=tel)
         histories[strat] = s.run()
+        if tel is not None:
+            tel.emit_summary()
     for i, h in enumerate(histories["fedavg"]):
         row = f"{h['round']:>6} "
         for strat in ("fedavg", "fedadc"):
@@ -35,6 +51,9 @@ def main():
     final = {s: h[-1]["acc"] for s, h in histories.items()}
     print(f"\nFedADC − FedAvg = {final['fedadc'] - final['fedavg']:+.3f} "
           f"(paper: FedADC > FedAvg, gap grows with skew)")
+    if sink is not None:
+        sink.close()
+        print(f"telemetry events written to {args.telemetry_jsonl}")
 
 
 if __name__ == "__main__":

@@ -22,10 +22,14 @@ from repro.models.registry import get_model
 
 
 def run_engine(cfg, args):
-    from repro.serving import SamplingParams, SchedulerConfig, ServingEngine
+    from repro.serving import (SamplingParams, SchedulerConfig, ServingEngine,
+                               latency_summary)
+    from repro.telemetry import Telemetry
+    tel = Telemetry(jsonl=args.telemetry_jsonl, engine="serving") \
+        if args.telemetry_jsonl else None
     eng = ServingEngine(cfg, sched=SchedulerConfig(
         n_slots=args.batch, max_len=args.prompt_len + args.gen,
-        prefill_chunk=16))
+        prefill_chunk=16), telemetry=tel)
     rng = np.random.RandomState(0)
     t0 = time.time()
     for i in range(2 * args.batch):          # oversubscribe the slots
@@ -36,11 +40,15 @@ def run_engine(cfg, args):
     outs = eng.run()
     dt = time.time() - t0
     toks = sum(len(o.tokens) for o in outs)
-    lats = sorted(o.latency for o in outs)
+    lat = latency_summary(outs)
     print(f"{args.arch}-reduced engine: {len(outs)} requests over "
           f"{args.batch} slots, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, p50 latency {lats[len(lats)//2]:.2f}s); "
+          f"({toks/dt:.1f} tok/s, p50 e2e {lat['e2e_s']['p50']:.2f}s, "
+          f"p50 TTFT {lat['ttft_s']['p50']:.2f}s); "
           f"sample row: {outs[0].tokens[:16]}")
+    if tel is not None:
+        tel.close()
+        print(f"telemetry events written to {args.telemetry_jsonl}")
 
 
 def main():
@@ -51,8 +59,14 @@ def main():
     ap.add_argument("--gen", type=int, default=48)
     ap.add_argument("--engine", action="store_true",
                     help="continuous-batching ServingEngine path")
+    ap.add_argument("--telemetry-jsonl", default=None,
+                    help="(--engine only) enable serving telemetry and "
+                         "write events to this JSONL file")
     args = ap.parse_args()
 
+    if args.telemetry_jsonl and not args.engine:
+        ap.error("--telemetry-jsonl needs the --engine path (the batch-"
+                 "synchronous demo has no serving telemetry)")
     if args.engine:
         run_engine(get_arch(args.arch).reduced(), args)
         return

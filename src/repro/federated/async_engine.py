@@ -46,8 +46,10 @@ import numpy as np
 from repro.configs.base import FedConfig, HeteroConfig
 from repro.core import tree as T
 from repro.core.selection import SELECTORS
+from repro.federated import aggregation as A
 from repro.federated.hetero import ClientSystemModel, staleness_discount
 from repro.federated.simulator import FederatedSimulator, SimConfig
+from repro.telemetry import drift as drift_metrics
 
 # Strategies with per-client cross-round state cannot ride the async engine
 # (a stale client would need its state rolled forward); same restriction as
@@ -68,13 +70,17 @@ class _InFlight:
 
 
 class AsyncFederatedSimulator(FederatedSimulator):
+    _engine_name = "async"
+
     def __init__(self, fed: FedConfig, sim: SimConfig, hetero: HeteroConfig,
-                 x_train, y_train, x_test, y_test, parts: List[np.ndarray]):
+                 x_train, y_train, x_test, y_test, parts: List[np.ndarray],
+                 telemetry=None):
         if fed.strategy in ASYNC_UNSUPPORTED:
             raise ValueError(
                 f"async engine supports stateless-client strategies only; "
                 f"use the synchronous simulator for {fed.strategy!r}")
-        super().__init__(fed, sim, x_train, y_train, x_test, y_test, parts)
+        super().__init__(fed, sim, x_train, y_train, x_test, y_test, parts,
+                         telemetry=telemetry)
         self.hetero = hetero
         self.system = ClientSystemModel(hetero, self.n_clients,
                                         fed.local_steps)
@@ -84,7 +90,10 @@ class AsyncFederatedSimulator(FederatedSimulator):
         self.version = 0              # number of server updates applied
         self.vtime = 0.0              # virtual clock
         self.event_log: List[tuple] = []   # (kind, time, client, version)
-        self.staleness_seen: List[int] = []
+        # bounded staleness summary, reset at each run() — replaces the
+        # old unbounded staleness_seen list that double-counted across
+        # consecutive run() calls
+        self.staleness_hist = self.telemetry.histogram("staleness")
         self._dispatch_ctr = 0        # compression PRNG stream, event order
         # one broadcast per server version: every dispatch at version v
         # hands out the same wire reconstruction (a broadcast is one
@@ -117,8 +126,11 @@ class AsyncFederatedSimulator(FederatedSimulator):
         if self._bcast_cache is None or self._bcast_cache[0] != self.version:
             key = jax.random.fold_in(
                 jax.random.fold_in(self._comp_key, 0xB0), self.version)
-            params_w, ctx, new_ref = self._bcast_fn(
-                self.params, self.server_state, self._down_ref, key)
+            with self.telemetry.tracer.span("transport.encode") as sp:
+                params_w, ctx, new_ref = self._bcast_fn(
+                    self.params, self.server_state, self._down_ref, key)
+                if self.telemetry.enabled:
+                    sp.sync = params_w
             if self.transport.needs_downlink_ref:
                 self._down_ref = new_ref
             self._bcast_cache = (self.version, params_w, ctx)
@@ -153,6 +165,10 @@ class AsyncFederatedSimulator(FederatedSimulator):
         -> (params', server_state').  `scales` folds the per-delta staleness
         discount and FedNova normalisation into one multiplier."""
         protocol = self.protocol
+        # static gating, exactly as in the synchronous round function: the
+        # disabled apply_fn is bit-identical to the pre-telemetry one
+        with_metrics = self.telemetry.enabled
+        has_momentum = A.reference_direction(self.server_state) is not None
 
         def apply_fn(params, server_state, deltas, n_examples, scales):
             scaled = jax.tree.map(
@@ -161,7 +177,17 @@ class AsyncFederatedSimulator(FederatedSimulator):
             weights = protocol.weights(scaled, n_examples=n_examples,
                                        server_state=server_state)
             mean_delta = protocol.aggregate(scaled, weights)
-            return protocol.server_update(server_state, params, mean_delta)
+            new_params, new_ss = protocol.server_update(server_state, params,
+                                                        mean_delta)
+            metrics = {}
+            if with_metrics:
+                # dispersion over the discounted/normalised deltas — what
+                # the server actually averaged this flush
+                metrics = drift_metrics.round_metrics(
+                    scaled, mean_delta,
+                    momentum=(A.reference_direction(server_state)
+                              if has_momentum else None))
+            return new_params, new_ss, metrics
 
         return apply_fn
 
@@ -208,8 +234,11 @@ class AsyncFederatedSimulator(FederatedSimulator):
             gkey = jax.random.fold_in(self._comp_key, self._dispatch_ctr)
             keys = jax.random.split(gkey, len(group))
             self._dispatch_ctr += 1
-            deltas, new_efs, losses = self._deltas_fn(
-                params_w, ctx, xb, yb, counts, cstates, efs, keys)
+            with self.telemetry.tracer.span("local_train") as sp:
+                deltas, new_efs, losses = self._deltas_fn(
+                    params_w, ctx, xb, yb, counts, cstates, efs, keys)
+                if self.telemetry.enabled:
+                    sp.sync = deltas
             if self.ef_enabled:
                 self._put_ef_states(group, new_efs)
             # every dispatched client receives the (θ_t, ctx) broadcast —
@@ -232,9 +261,9 @@ class AsyncFederatedSimulator(FederatedSimulator):
 
     def _flush(self, buffer: List[_InFlight]):
         """Apply one buffered-K server update from the collected deltas."""
-        fed = self.fed
+        fed, tel = self.fed, self.telemetry
         stale = np.asarray([self.version - r.version for r in buffer])
-        self.staleness_seen.extend(int(s) for s in stale)
+        self.staleness_hist.observe_many(int(s) for s in stale)
         disc = staleness_discount(stale, fed.staleness_mode,
                                   fed.staleness_factor)
         scales = jnp.asarray(
@@ -242,10 +271,21 @@ class AsyncFederatedSimulator(FederatedSimulator):
         n_ex = jnp.asarray([r.n_examples for r in buffer], jnp.float32)
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *[r.delta for r in buffer])
-        self.params, self.server_state = self._apply_fn(
-            self.params, self.server_state, stacked, n_ex, scales)
+        with tel.tracer.span("aggregate") as sp:
+            self.params, self.server_state, metrics = self._apply_fn(
+                self.params, self.server_state, stacked, n_ex, scales)
+            if tel.enabled:
+                sp.sync = self.params
         self.version += 1
-        return float(np.mean([r.loss for r in buffer]))
+        loss = float(np.mean([r.loss for r in buffer]))
+        if tel.enabled:
+            metrics = jax.device_get(metrics)    # one host fetch per flush
+            tel.record_round(self.version, {
+                **metrics, "loss": loss,
+                "staleness_mean": float(stale.mean()),
+                "staleness_max": float(stale.max()),
+            })
+        return loss
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, log_fn: Callable = None):
@@ -254,6 +294,9 @@ class AsyncFederatedSimulator(FederatedSimulator):
         accuracy comparisons against the synchronous engines are direct."""
         rounds = rounds or self.sim.rounds
         fed = self.fed
+        # per-run staleness summary: a fresh run() must not double-count
+        # the previous run's observations
+        self.staleness_hist.reset()
         K = fed.buffer_k or fed.clients_per_round
         inflight = max(fed.clients_per_round, K)
         heap: list = []
@@ -292,9 +335,9 @@ class AsyncFederatedSimulator(FederatedSimulator):
                     self._dispatch(heap, K, self.vtime)
                 if self.version % self.sim.eval_every == 0 or done:
                     acc = self.evaluate()
-                    self.history.append({"round": self.version,
-                                         "t": self.vtime, "acc": acc,
-                                         "loss": loss})
+                    self.telemetry.record_eval({"round": self.version,
+                                                "t": self.vtime, "acc": acc,
+                                                "loss": loss})
                     if log_fn:
                         log_fn(self.history[-1])
         return self.history

@@ -40,11 +40,17 @@ class RoundProtocol:
     """One federated round's pluggable pieces, composed once per engine."""
 
     def __init__(self, fed, strategy=None, store: Optional[ClientStore] = None,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None, telemetry=None):
         self.fed = fed
         self.strategy = strategy if strategy is not None \
             else get_strategy(fed.strategy)
-        self.transport = transport if transport is not None else Transport(fed)
+        if transport is not None:
+            self.transport = transport
+        else:
+            # a wired Telemetry shares its counter registry with the wire
+            # layer so transport bytes land in the same snapshot/export
+            counters = telemetry.counters if telemetry is not None else None
+            self.transport = Transport(fed, counters=counters)
         self.store = store if store is not None else ClientStore()
         if fed.strategy in STATEFUL_SERVER_CORRECTION:
             if fed.aggregator != "uniform":

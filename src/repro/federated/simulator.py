@@ -30,8 +30,11 @@ from repro.core import tree as T
 from repro.core.selection import SELECTORS
 from repro.core.strategies import get_strategy
 from repro.data.partition import class_counts
+from repro.federated import aggregation as A
 from repro.federated.protocol import RoundProtocol
 from repro.models.vision import VISION_MODELS
+from repro.telemetry import Telemetry
+from repro.telemetry import drift as drift_metrics
 
 
 @dataclass
@@ -55,10 +58,19 @@ class SimConfig:
 
 
 class FederatedSimulator:
+    _engine_name = "sim"
+
     def __init__(self, fed: FedConfig, sim: SimConfig,
                  x_train, y_train, x_test, y_test,
-                 parts: List[np.ndarray]):
+                 parts: List[np.ndarray],
+                 telemetry: Optional[Telemetry] = None):
         self.fed, self.sim = fed, sim
+        # observability is an engine argument, not a FedConfig field: the
+        # same config must hash/trace identically with telemetry on or off
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled(self._engine_name)
+        if not self.telemetry.engine:
+            self.telemetry.engine = self._engine_name
         self.x_train, self.y_train = x_train, y_train
         self.x_test, self.y_test = x_test, y_test
         self.parts = parts
@@ -79,7 +91,8 @@ class FederatedSimulator:
         # the unified round protocol: transport (both wire directions) +
         # sharded client store + aggregator, with cross-cutting validation
         # (lossy/weighted aggregation × SCAFFOLD/FedDyn rejections)
-        self.protocol = RoundProtocol(fed, strategy=self.strategy)
+        self.protocol = RoundProtocol(fed, strategy=self.strategy,
+                                      telemetry=self.telemetry)
         self.transport = self.protocol.transport
         self.server_state = self.strategy.server_init(self.params)
         self.needs_teacher = fed.distill or fed.strategy in ("fedgkd", "fedntd")
@@ -104,7 +117,12 @@ class FederatedSimulator:
         self._rounds_done = 0
         self._round_fn = jax.jit(self._make_round_fn())
         self._eval_fn = jax.jit(self._make_eval_fn())
-        self.history: List[Dict] = []
+
+    @property
+    def history(self) -> List[Dict]:
+        """The eval history — absorbed into the telemetry facade (appended
+        there whether or not telemetry is enabled)."""
+        return self.telemetry.history
 
     # --- store/transport views (the pre-protocol public surface) ----------
     @property
@@ -247,6 +265,12 @@ class FederatedSimulator:
         transported = protocol.transport.up is not None
         down = protocol.transport.down
         lossy_down = down is not None and down.lossy
+        # drift diagnostics are gated on STATIC facts only (telemetry flag,
+        # momentum-keeping strategy, EF on) — the disabled round function is
+        # bit-identical to the pre-telemetry one and neither path retraces
+        with_metrics = self.telemetry.enabled
+        has_momentum = A.reference_direction(self.server_state) is not None
+        ef_metrics = self.ef_enabled
 
         def round_fn(params, server_state, xb, yb, counts, cstates,
                      n_examples, efs, key, down_ref):
@@ -285,7 +309,15 @@ class FederatedSimulator:
             else:
                 new_params, new_ss = protocol.server_update(
                     server_state, params, mean_delta)
-            return new_params, new_ss, ncs, new_efs, jnp.mean(losses), new_ref
+            metrics = {}
+            if with_metrics:
+                metrics = drift_metrics.round_metrics(
+                    deltas, mean_delta,
+                    momentum=(A.reference_direction(server_state)
+                              if has_momentum else None),
+                    efs=new_efs if ef_metrics else None)
+            return (new_params, new_ss, ncs, new_efs, jnp.mean(losses),
+                    new_ref, metrics)
 
         return round_fn
 
@@ -318,6 +350,7 @@ class FederatedSimulator:
     def run(self, rounds: Optional[int] = None, log_fn: Callable = None):
         rounds = self.sim.rounds if rounds is None else rounds
         sel = SELECTORS[self.sim.selector]
+        tel = self.telemetry
         for t in range(rounds):
             if self.sim.selector == "random":
                 picks = sel(self.rng, self.n_clients, self.fed.clients_per_round)
@@ -332,11 +365,16 @@ class FederatedSimulator:
             n_examples = jnp.asarray([len(self.parts[int(c)]) for c in picks],
                                      jnp.float32)
             efs = self._get_ef_states(picks)
-            (self.params, self.server_state, ncs, nefs, loss,
-             new_ref) = self._round_fn(
-                self.params, self.server_state, xb, yb, counts, cstates,
-                n_examples, efs, jax.random.fold_in(self._comp_key, t),
-                self._down_ref)
+            with tel.tracer.span("round") as sp:
+                (self.params, self.server_state, ncs, nefs, loss,
+                 new_ref, metrics) = self._round_fn(
+                    self.params, self.server_state, xb, yb, counts, cstates,
+                    n_examples, efs, jax.random.fold_in(self._comp_key, t),
+                    self._down_ref)
+                if tel.enabled:
+                    # span stops after the round's device work, not after
+                    # the async dispatch that launched it
+                    sp.sync = (self.params, loss)
             if self.stateful:
                 self._put_client_states(picks, ncs)
             if self.ef_enabled:
@@ -348,10 +386,14 @@ class FederatedSimulator:
                 len(picks), resync=(self._rounds_done == 0))
             self._rounds_done += 1
             self.transport.account_uplink(len(picks))
+            if tel.enabled:
+                # ONE host fetch for the whole diagnostic tree + loss
+                metrics, loss_h = jax.device_get((metrics, loss))
+                tel.record_round(t, {**metrics, "loss": float(loss_h)})
             if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()
-                self.history.append({"round": t + 1, "acc": acc,
-                                     "loss": float(loss)})
+                tel.record_eval({"round": t + 1, "acc": acc,
+                                 "loss": float(loss)})
                 if log_fn:
                     log_fn(self.history[-1])
         return self.history

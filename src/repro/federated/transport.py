@@ -310,7 +310,7 @@ class Transport:
     through `account_uplink` / `account_downlink` once per transported
     client.  Engines own their instance — counters are engine-local."""
 
-    def __init__(self, fed):
+    def __init__(self, fed, counters=None):
         if fed.sparse_uplink and fed.compressor not in ("topk", "none"):
             raise ValueError(
                 f"sparse_uplink is the (value, index) top-k wire format; "
@@ -320,12 +320,33 @@ class Transport:
         self.down = make_codec(fed.downlink_compressor, fed, "downlink")
         self.ef_enabled = (self.up is not None and self.up.lossy
                           and fed.error_feedback)
-        self.uplink_bytes = 0        # measured (wire format) totals
-        self.uplink_bytes_raw = 0    # uncompressed baselines
-        self.downlink_bytes = 0
-        self.downlink_bytes_raw = 0
+        # byte totals live in a telemetry Counters registry (shared with
+        # the engine's Telemetry when one is wired; private otherwise) —
+        # the uplink_bytes/... names below stay as property views
+        if counters is None:
+            from repro.telemetry import Counters
+            counters = Counters()
+        self.counters = counters
         self._up_nbytes = self._up_raw = 0
         self._down_nbytes = self._down_raw = 0
+
+    # measured (wire format) totals + uncompressed baselines — views over
+    # the counter registry so one snapshot captures the whole wire
+    @property
+    def uplink_bytes(self):
+        return self.counters.get("transport.uplink_bytes")
+
+    @property
+    def uplink_bytes_raw(self):
+        return self.counters.get("transport.uplink_bytes_raw")
+
+    @property
+    def downlink_bytes(self):
+        return self.counters.get("transport.downlink_bytes")
+
+    @property
+    def downlink_bytes_raw(self):
+        return self.counters.get("transport.downlink_bytes_raw")
 
     @property
     def needs_downlink_ref(self) -> bool:
@@ -396,8 +417,10 @@ class Transport:
                                  else self.down.wire_nbytes(downlink_template))
 
     def account_uplink(self, n_clients: int = 1):
-        self.uplink_bytes += n_clients * self._up_nbytes
-        self.uplink_bytes_raw += n_clients * self._up_raw
+        self.counters.inc("transport.uplink_bytes",
+                          n_clients * self._up_nbytes)
+        self.counters.inc("transport.uplink_bytes_raw",
+                          n_clients * self._up_raw)
 
     def account_downlink(self, n_clients: int = 1, resync: bool = False):
         """`resync=True` marks broadcasts that ship the full tree instead of
@@ -407,8 +430,9 @@ class Transport:
         nbytes = self._down_nbytes
         if resync and self.needs_downlink_ref:
             nbytes = self._down_raw
-        self.downlink_bytes += n_clients * nbytes
-        self.downlink_bytes_raw += n_clients * self._down_raw
+        self.counters.inc("transport.downlink_bytes", n_clients * nbytes)
+        self.counters.inc("transport.downlink_bytes_raw",
+                          n_clients * self._down_raw)
 
     # template-free probes (benchmarks, shims)
     def uplink_wire_nbytes(self, template) -> int:

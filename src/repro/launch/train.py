@@ -42,6 +42,7 @@ from repro.federated import aggregation as A
 from repro.federated import store as CS
 from repro.federated.transport import Transport
 from repro.models.registry import get_model
+from repro.telemetry import drift as drift_metrics
 
 POD_SUPPORTED = ("fedavg", "slowmo", "fedadc", "fedadc_double", "fedprox",
                  "fedadc+")
@@ -143,8 +144,16 @@ def _local_objective(model, mcfg: ModelConfig, fed: FedConfig,
 
 
 def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
-                    client_parallel: int = 1):
-    """-> train_step(state, batch).  One communication round."""
+                    client_parallel: int = 1, telemetry=None):
+    """-> train_step(state, batch).  One communication round.
+
+    With an enabled ``telemetry``, the aux dict gains a ``"telemetry"``
+    sub-dict of in-jit drift scalars (streaming weighted dispersion,
+    ``||Δ̄||``, momentum alignment, EF-residual norm); with telemetry off
+    (the default) the returned program is bit-identical to the
+    pre-telemetry one — the gate is a static Python fact, never a traced
+    value."""
+    with_metrics = telemetry is not None and telemetry.enabled
     if fed.strategy not in POD_SUPPORTED:
         raise ValueError(
             f"pod engine supports stateless-client strategies {POD_SUPPORTED};"
@@ -203,7 +212,10 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         def serial(carry, inp):
             cb, ck = inp[:2]
             ef = inp[2] if efs is not None else None
-            acc, wsum = carry
+            if with_metrics:
+                acc, wsum, sqsum = carry
+            else:
+                acc, wsum = carry
             d, l = client_delta(theta_t, ctx, cb)
             new_ef = ef if efs is not None else jnp.zeros(())
             if transported:
@@ -218,11 +230,20 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             # happens after the cross-pod aggregation below
             acc = jax.tree.map(
                 lambda a, di: a + w * di.astype(jnp.float32), acc, d)
+            if with_metrics:
+                # the only telemetry cost in the scan: one fp32 scalar,
+                # Σ w·||Δ||², for the streaming-dispersion identity
+                sqsum = sqsum + drift_metrics.streaming_sq_norm(d, w)
+                return (acc, wsum + w, sqsum), (l, new_ef)
             return (acc, wsum + w), (l, new_ef)
         acc0 = (T.cast(T.zeros_like(theta_t), jnp.float32), jnp.zeros(()))
+        if with_metrics:
+            acc0 = acc0 + (jnp.zeros(()),)
         xs = (cbs, ckeys) if efs is None else (cbs, ckeys, efs)
-        (acc, wsum), (ls, new_efs) = jax.lax.scan(serial, acc0, xs)
-        return acc, wsum, jnp.mean(ls), new_efs
+        carry_out, (ls, new_efs) = jax.lax.scan(serial, acc0, xs)
+        acc, wsum = carry_out[:2]
+        sqsum = carry_out[2] if with_metrics else jnp.zeros(())
+        return acc, wsum, jnp.mean(ls), new_efs, sqsum
 
     compute_dtype = jnp.dtype(run.compute_dtype)
 
@@ -268,20 +289,21 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         if CP == 1:
             squeezed = jax.tree.map(lambda x: x[0], batch)
             efs0 = None if efs is None else jax.tree.map(lambda x: x[0], efs)
-            acc, wsum, loss, new_efs = per_group(theta_t, ctx, ref, squeezed,
-                                                 pod_keys[0], efs0)
+            acc, wsum, loss, new_efs, sqsum = per_group(
+                theta_t, ctx, ref, squeezed, pod_keys[0], efs0)
             group_means = jax.tree.map(
                 lambda a: (a / wsum.astype(a.dtype))[None], acc)
             gweights = wsum[None]
+            sq_total, w_total = sqsum, wsum
             if efs is not None:
                 new_efs = jax.tree.map(lambda x: x[None], new_efs)
         else:
             if efs is None:
-                accs, wsums, losses, new_efs = jax.vmap(
+                accs, wsums, losses, new_efs, sqsums = jax.vmap(
                     lambda cbs, gk: per_group(theta_t, ctx, ref, cbs, gk)
                 )(batch, pod_keys)
             else:
-                accs, wsums, losses, new_efs = jax.vmap(
+                accs, wsums, losses, new_efs, sqsums = jax.vmap(
                     lambda cbs, gk, e: per_group(theta_t, ctx, ref, cbs,
                                                  gk, e)
                 )(batch, pod_keys, efs)
@@ -289,6 +311,7 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
                 lambda a: a / wsums.reshape((-1,) + (1,) * (a.ndim - 1)
                                             ).astype(a.dtype), accs)
             gweights = wsums
+            sq_total, w_total = jnp.sum(sqsums), jnp.sum(wsums)
             loss = jnp.mean(losses)
         # per-pod weighted means recombine exactly through the shared hook:
         # Δ̄ = Σ_p W_p·Δ̄_p / Σ_p W_p = Σ_i w_i·Δ_i / Σ_i w_i by linearity.
@@ -310,6 +333,22 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
                 lambda x: x.reshape((-1,) + x.shape[2:]), new_efs)
             new_state["clients"] = {"ef": CS.sharded_scatter(
                 state["clients"]["ef"], client_ids.reshape(-1), flat_new)}
-        return new_state, {"loss": loss}
+        aux = {"loss": loss}
+        if with_metrics:
+            metrics = {
+                "delta_dispersion": drift_metrics.streaming_dispersion(
+                    sq_total, w_total, mean_delta),
+                "update_norm": drift_metrics.update_norm(mean_delta),
+            }
+            if "m" in state["server"]:
+                metrics["momentum_alignment"] = \
+                    drift_metrics.momentum_alignment(state["server"]["m"],
+                                                     mean_delta)
+            if ef_enabled:
+                metrics["ef_residual_norm"] = drift_metrics.ef_residual_norm(
+                    jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                                 new_efs))
+            aux["telemetry"] = metrics
+        return new_state, aux
 
     return train_step

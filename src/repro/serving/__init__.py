@@ -5,7 +5,8 @@ from repro.serving.request import (Request, RequestOutput, RequestQueue,
                                    SamplingParams)
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.telemetry import latency_summary
 
 __all__ = ["CacheManager", "ServingEngine", "Request", "RequestOutput",
            "RequestQueue", "SamplingParams", "sample_tokens", "Scheduler",
-           "SchedulerConfig"]
+           "SchedulerConfig", "latency_summary"]

@@ -37,6 +37,7 @@ from repro.serving.request import (DECODE, FINISHED, Request, RequestOutput,
                                    SamplingParams)
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.telemetry import Telemetry
 
 
 # jit'd inner steps are cached on the (hashable, frozen) ModelConfig so
@@ -55,7 +56,7 @@ def _jit_chunk_step(mcfg: ModelConfig, chunk: int):
 class ServingEngine:
     def __init__(self, mcfg: ModelConfig, params=None,
                  sched: SchedulerConfig = None, dtype=jnp.float32,
-                 init_seed: int = 0):
+                 init_seed: int = 0, telemetry: Telemetry = None):
         if mcfg.is_encoder_decoder:
             raise ValueError(
                 "ServingEngine serves decoder-only archs; enc-dec (whisper) "
@@ -74,6 +75,10 @@ class ServingEngine:
         self._chunk_step = _jit_chunk_step(mcfg, self.sched_cfg.prefill_chunk)
         self._next_rid = 0
         self.n_steps = 0
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry.disabled("serving")
+        if not self.telemetry.engine:
+            self.telemetry.engine = "serving"
 
     # ------------------------------------------------------------------
     def add_request(self, prompt: Sequence[int], max_new_tokens: int = 16,
@@ -100,19 +105,33 @@ class ServingEngine:
     def step(self) -> List[RequestOutput]:
         """One scheduler step: admit, one prefill chunk, one batched decode
         step.  Returns the requests that finished during this step."""
+        tel = self.telemetry
         finished: List[Request] = []
         self.scheduler.admit_ready()
         req = self.scheduler.next_prefill()
         if req is not None:
-            self._prefill_one_chunk(req, finished)
+            with tel.tracer.span("prefill_chunk"):
+                self._prefill_one_chunk(req, finished)
         dec = self.scheduler.decode_requests()
         if dec:
-            self._decode_all(dec, finished)
+            with tel.tracer.span("decode_step"):
+                self._decode_all(dec, finished)
         self.n_steps += 1
-        return [self._output(r) for r in finished]
+        if tel.enabled:
+            # scheduler gauges + per-step token counter: cheap host ints
+            tel.counters.set("serving.queue_depth", len(self.scheduler.queue))
+            tel.counters.set("serving.slots_occupied",
+                             sum(r is not None for r in self.scheduler.slots))
+            tel.counters.inc("serving.steps")
+        outs = [self._output(r) for r in finished]
+        for o in outs:
+            tel.record_request(o)
+        return outs
 
     def run(self, max_steps: int = 100_000) -> List[RequestOutput]:
-        """Drive steps until queue and slots drain; outputs by rid."""
+        """Drive steps until queue and slots drain; outputs by rid.  With
+        telemetry enabled, one ``summary`` event (latency percentiles, span
+        timings, counters) is emitted after the drain."""
         outputs: List[RequestOutput] = []
         steps = 0
         while self.has_work():
@@ -120,7 +139,10 @@ class ServingEngine:
             steps += 1
             if steps >= max_steps:
                 raise RuntimeError(f"engine did not drain in {max_steps} steps")
-        return sorted(outputs, key=lambda o: o.rid)
+        outputs = sorted(outputs, key=lambda o: o.rid)
+        if self.telemetry.enabled and outputs:
+            self.telemetry.emit_summary(outputs)
+        return outputs
 
     # ------------------------------------------------------------------
     def _prefill_one_chunk(self, req: Request, finished: List[Request]):

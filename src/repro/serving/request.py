@@ -61,6 +61,14 @@ class RequestOutput:
         """Time to first token."""
         return self.first_token_t - self.arrival_t
 
+    @property
+    def itl(self) -> Optional[float]:
+        """Mean inter-token latency; None for single-token requests (no
+        gap exists)."""
+        if len(self.tokens) < 2:
+            return None
+        return (self.finish_t - self.first_token_t) / (len(self.tokens) - 1)
+
 
 class RequestQueue:
     """FIFO admission queue."""

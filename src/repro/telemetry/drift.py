@@ -1,0 +1,97 @@
+"""In-jit drift diagnostics (DESIGN.md §Telemetry).
+
+FedADC's claim is that local momentum *controls drift*; these are the cheap
+scalar reductions that make drift observable every round without leaving
+the jit'd round function:
+
+* ``delta_dispersion`` — client-delta divergence
+  ``mean_i ||Δ_i − Δ̄||² / ||Δ̄||²`` (DRAG's divergence signal, arXiv
+  2309.01779, computed as a diagnostic rather than a weighting);
+* ``momentum_alignment`` — ``cos(m̄, Δ̄)`` between the server momentum and
+  the round aggregate: +1 when clients push where the momentum already
+  points, ≤0 when the aggregate fights the acceleration;
+* ``ef_residual_norm`` — mean per-client ``||e_i||`` of the uplink
+  error-feedback residuals (how much signal the lossy wire is deferring);
+* ``update_norm`` — ``||Δ̄||``.
+
+Everything reduces to a handful of f32 scalars inside the round function,
+so the per-round cost is a few tree reductions and the host fetches the
+whole metric dict in ONE transfer after the round — no per-metric
+device↔host chatter.  The key set is decided at trace time from static
+facts (does the strategy keep a momentum? is EF on?), so the round
+function compiles once and never retraces on the metric path.
+
+The ``streaming_*`` helpers are the pod engine's client-serial form: the
+scan accumulates ``Σ w_i·||Δ_i||²`` (one f32 scalar in the carry) and the
+weighted dispersion follows from the variance identity
+``E_w||Δ − Δ̄||² = E_w||Δ||² − ||Δ̄||²`` with ``Δ̄ = E_w[Δ]`` — no stacked
+delta tree is ever materialised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree as T
+
+EPS = 1e-12
+
+
+def delta_dispersion(deltas, mean_delta):
+    """``mean_i ||Δ_i − Δ̄||² / ||Δ̄||²`` over a stacked (leading-axis
+    clients) delta pytree."""
+    nbar = T.sq_norm(mean_delta)
+    per = jax.vmap(lambda d: T.sq_norm(T.sub(d, mean_delta)))(deltas)
+    return (jnp.mean(per) / (nbar + EPS)).astype(jnp.float32)
+
+
+def momentum_alignment(momentum, mean_delta):
+    """``cos(m̄, Δ̄)``; 0 while either side is (numerically) zero, e.g. the
+    round-0 momentum."""
+    num = T.dot(momentum, mean_delta)
+    den = jnp.sqrt(T.sq_norm(momentum) * T.sq_norm(mean_delta) + EPS)
+    return (num / den).astype(jnp.float32)
+
+
+def ef_residual_norm(efs):
+    """Mean per-client ``||e_i||`` over a stacked EF-residual pytree."""
+    per = jax.vmap(lambda e: jnp.sqrt(T.sq_norm(e)))(efs)
+    return jnp.mean(per).astype(jnp.float32)
+
+
+def update_norm(mean_delta):
+    return jnp.sqrt(T.sq_norm(mean_delta)).astype(jnp.float32)
+
+
+def round_metrics(deltas, mean_delta, momentum=None, efs=None):
+    """The per-round drift tree for engines that hold the stacked deltas
+    (sync simulator round, async flush).  Keys are static in (momentum is
+    None, efs is None) — both trace-time facts."""
+    m = {
+        "delta_dispersion": delta_dispersion(deltas, mean_delta),
+        "update_norm": update_norm(mean_delta),
+    }
+    if momentum is not None:
+        m["momentum_alignment"] = momentum_alignment(momentum, mean_delta)
+    if efs is not None:
+        m["ef_residual_norm"] = ef_residual_norm(efs)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# streaming (client-serial) form — the pod engine's scan accumulates one
+# scalar second moment instead of materialising the per-client deltas
+# ---------------------------------------------------------------------------
+def streaming_sq_norm(delta, weight):
+    """One scan step's contribution to ``Σ w_i·||Δ_i||²`` (f32)."""
+    return weight * T.sq_norm(delta)
+
+
+def streaming_dispersion(sum_w_sq_norm, weight_sum, mean_delta):
+    """Weighted dispersion ``E_w||Δ_i − Δ̄||² / ||Δ̄||²`` from the
+    accumulated moments: ``E_w||Δ||² − ||Δ̄||²`` over ``||Δ̄||²``.  Equals
+    :func:`delta_dispersion` exactly under uniform weights."""
+    nbar = T.sq_norm(mean_delta)
+    second = sum_w_sq_norm / (weight_sum + EPS)
+    return (jnp.maximum(second - nbar, 0.0) / (nbar + EPS)).astype(
+        jnp.float32)

@@ -218,7 +218,7 @@ class TestAsyncEngine:
             e = AsyncFederatedSimulator(fed, _sim(rounds=5), HETERO,
                                         x, y, xt, yt, parts)
             h = e.run()
-            runs.append((e.event_log, e.staleness_seen, h))
+            runs.append((e.event_log, e.staleness_hist.to_dict(), h))
         assert runs[0][0] == runs[1][0]      # identical event sequences
         assert runs[0][1] == runs[1][1]
         assert runs[0][2] == runs[1][2]
@@ -229,7 +229,7 @@ class TestAsyncEngine:
         e = AsyncFederatedSimulator(fed, _sim(rounds=5), HETERO,
                                     x, y, xt, yt, parts)
         h = e.run()
-        assert max(e.staleness_seen) >= 1    # stale deltas actually occurred
+        assert e.staleness_hist.max >= 1     # stale deltas actually occurred
         assert np.isfinite(h[-1]["loss"])
 
     def test_sync_barrier_mode_has_zero_staleness(self, data):
@@ -238,7 +238,7 @@ class TestAsyncEngine:
         e = AsyncFederatedSimulator(fed, _sim(rounds=3), HETERO,
                                     x, y, xt, yt, parts)
         e.run()
-        assert max(e.staleness_seen) == 0
+        assert e.staleness_hist.max == 0 and e.staleness_hist.count > 0
 
     def test_stateful_strategies_rejected(self, data):
         x, y, xt, yt, parts = data
@@ -257,7 +257,7 @@ class TestAsyncEngine:
         asyn = AsyncFederatedSimulator(fed, _sim(rounds=4), HeteroConfig(),
                                        x, y, xt, yt, parts)
         h_async = asyn.run()
-        assert max(asyn.staleness_seen) == 0
+        assert asyn.staleness_hist.max == 0
         for hs, ha in zip(h_sync, h_async):
             assert hs["round"] == ha["round"]
             np.testing.assert_allclose(hs["loss"], ha["loss"], rtol=2e-4)

@@ -261,7 +261,7 @@ class TestDeltaTransportAsync:
 
         eng._broadcast = spy
         eng.run()
-        assert max(eng.staleness_seen) > 0, "fleet must actually go stale"
+        assert eng.staleness_hist.max > 0, "fleet must actually go stale"
         disp_versions = {e[3] for e in eng.event_log if e[0] == "dispatch"}
         assert set(rec) == disp_versions
         for v, r in rec.items():

@@ -12,6 +12,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
+import jax
 import numpy as np
 
 from repro.configs.base import FedConfig, HeteroConfig
@@ -52,13 +53,16 @@ def run_fl(strategy, parts, data, *, rounds=60, n_clients=20,
     if extra_fed:
         fed_kw.update(extra_fed)
     fed = FedConfig(**fed_kw)
+    # explicit None-check: eval_every=0 must not silently become `rounds`
     sim = SimConfig(model=model, n_classes=n_classes, batch_size=batch_size,
-                    rounds=rounds, eval_every=eval_every or rounds,
+                    rounds=rounds,
+                    eval_every=rounds if eval_every is None else eval_every,
                     cnn_width=8, selector=selector, seed=seed)
     s = FederatedSimulator(fed, sim, x, y, xt, yt, parts,
                            telemetry=telemetry)
     t0 = time.time()
     hist = s.run()
+    jax.block_until_ready(s.params)  # barrier before stopping the clock
     wall = time.time() - t0
     return {"acc": hist[-1]["acc"], "loss": hist[-1]["loss"],
             "us_per_round": wall / rounds * 1e6, "hist": hist, "sim": s}
@@ -83,6 +87,7 @@ def run_fl_async(strategy, parts, data, *, hetero: HeteroConfig, rounds=60,
                                 telemetry=telemetry)
     t0 = time.time()
     hist = s.run()
+    jax.block_until_ready(s.params)  # barrier before stopping the clock
     wall = time.time() - t0
     return {"acc": hist[-1]["acc"], "loss": hist[-1]["loss"],
             "us_per_round": wall / rounds * 1e6, "hist": hist, "sim": s}

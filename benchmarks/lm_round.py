@@ -44,6 +44,10 @@ def run(strategy, eta, seed=0):
             bt[0, ci] = tokens[sel]
         state, m = step(state, {"tokens": jnp.asarray(bt[..., :-1]),
                                 "labels": jnp.asarray(bt[..., 1:])})
+    # barrier + stop the clock BEFORE the eval trace, so the timed window
+    # covers exactly the ROUNDS dispatched steps
+    jax.block_until_ready(state["params"])
+    us_per_round = (time.time() - t0) / ROUNDS * 1e6
     # held-out eval loss over all domains
     from repro.models.registry import get_model
     model = get_model(mcfg)
@@ -51,7 +55,7 @@ def run(strategy, eta, seed=0):
     loss = float(ev(state["params"],
                     {"tokens": jnp.asarray(held[:, :-1]),
                      "labels": jnp.asarray(held[:, 1:])}))
-    return loss, (time.time() - t0) / ROUNDS * 1e6
+    return loss, us_per_round
 
 
 def main(rows=None):

@@ -50,6 +50,8 @@ def run_level(params, prompts, n_slots, prefill_chunk=16):
     for p in prompts:
         eng.add_request(p, max_new_tokens=GEN)
     outs = eng.run()
+    # barrier on the device-resident KV cache before stopping the clock
+    jax.block_until_ready(eng.cachemgr.cache)
     wall = time.perf_counter() - t0
     tokens = sum(len(o.tokens) for o in outs)
     return {

@@ -20,6 +20,8 @@ import argparse
 import json
 import time
 
+import jax
+
 from benchmarks.common import dataset, emit, partitions, run_fl
 from repro.telemetry import Telemetry
 
@@ -35,6 +37,7 @@ def _timed_run(parts, data, rounds, warmup, telemetry):
     t0 = time.perf_counter()
     r = run_fl("fedadc", parts, data, rounds=rounds, n_clients=20, seed=0,
                telemetry=Telemetry(engine="sim") if telemetry else None)
+    jax.block_until_ready(r["sim"].params)  # barrier before stopping the clock
     return time.perf_counter() - t0, r
 
 

@@ -1,0 +1,29 @@
+"""repro.analysis — repo-contract static analysis (DESIGN.md §Static analysis).
+
+Two layers, zero dependencies beyond the stdlib + jax already in the tree:
+
+* Layer 1 — AST checkers (`ast_rules.py`) encode the repo's shipped bug
+  classes as named rules over ``src/``, ``benchmarks/`` and ``examples/``.
+* Layer 2 — trace-time audits (`trace_audit.py`) trace the three round
+  engines and the aggregation kernels on shaped zeros (no real data) and
+  walk the jaxprs for retrace and accumulation-precision contracts.
+
+Findings are emitted as JSONL reusing the telemetry event envelope
+(``kind="finding"``), suppressed only via the committed
+``analysis_baseline.json``, and gate CI through
+``python -m repro.analysis --require-clean``.
+"""
+from repro.analysis.findings import Finding, findings_to_jsonl
+from repro.analysis.baseline import Baseline, load_baseline
+from repro.analysis.ast_rules import RULES, run_ast_rules
+from repro.analysis.trace_audit import run_trace_audits
+
+__all__ = [
+    "Finding",
+    "findings_to_jsonl",
+    "Baseline",
+    "load_baseline",
+    "RULES",
+    "run_ast_rules",
+    "run_trace_audits",
+]

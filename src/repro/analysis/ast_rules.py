@@ -1,0 +1,643 @@
+"""Layer 1 — AST checkers encoding the repo's shipped bug classes.
+
+Each rule is a pure function over one parsed module; the registry maps rule
+ids to checkers.  Rules (the PR that shipped each bug class in brackets):
+
+* ``truthiness-on-config`` [PR 2] — ``if cfg.x:`` / ``x or default`` where
+  ``x`` is a *numeric* config field: 0 / 0.0 are valid values (``rounds=0``,
+  ``buffer_k=0``, ``topk_frac=0.0``) and truthiness silently rewrites them.
+* ``low-precision-accumulation`` [PR 5] — ``jnp.sum``/``dot``/``tensordot``/
+  ``einsum``/``scan`` consuming bf16/fp8 operands with no fp32 cast,
+  ``preferred_element_type`` or fp32 ``dtype=`` in sight: bf16 sums lose
+  late clients once ``Σw`` grows past the mantissa.
+* ``unkeyed-config-cache`` [PR 5] — ``lru_cache`` on a function whose
+  parameters are not all hashable scalars or frozen config dataclasses:
+  the cache key silently under- or over-keys the trace.
+* ``host-sync-in-jit`` [PR 2/6] — ``float()``/``.item()``/``np.*``/
+  ``device_get``/``print`` reachable from a jit-traced body (decorated,
+  or returned by a ``_make_*`` factory that is ``jax.jit``-ed).
+* ``timer-without-barrier`` [PR 6] — a ``time.time()``/``perf_counter()``
+  interval in ``benchmarks/`` with no ``block_until_ready``/``device_get``
+  between start and stop: on an async backend the clock stops before the
+  device finishes.
+* ``unbounded-host-accumulator`` [PR 6] — a ``self.x = [] / {}`` attribute
+  that is appended to in engine loops and never reset/bounded (the async
+  engine's ``staleness_seen`` class).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# --------------------------------------------------------------------------
+# Repo context: config-field and frozen-config introspection
+# --------------------------------------------------------------------------
+
+# fallback sets, used only if the configs package cannot be imported (the
+# live introspection below is the source of truth)
+_FALLBACK_NUMERIC_FIELDS = frozenset({
+    "rounds", "eval_every", "local_steps", "buffer_k", "head_dim",
+    "sliding_window", "topk_frac", "qsgd_bits", "n_patch_tokens", "d_ff",
+})
+_FALLBACK_FROZEN_CONFIGS = frozenset({
+    "ModelConfig", "FedConfig", "HeteroConfig", "ShapeConfig", "RunConfig",
+    "MoEConfig", "MLAConfig", "SSMConfig", "SimConfig",
+})
+
+_SCALAR_ANNOTATIONS = {
+    "int", "float", "str", "bool", "bytes", "None", "Optional",
+    "Tuple", "tuple", "FrozenSet", "frozenset",
+}
+
+
+def _numeric_annotation(ann: str) -> bool:
+    ann = ann.strip()
+    return ann in ("int", "float", "Optional[int]", "Optional[float]")
+
+
+@dataclasses.dataclass(frozen=True)
+class RepoContext:
+    """Facts about the repo the rules key on (field names, frozen configs)."""
+    numeric_fields: frozenset
+    frozen_configs: frozenset
+
+
+def build_context() -> RepoContext:
+    """Introspect the live config dataclasses for numeric field names and
+    frozen (hashable, jit-static-safe) config class names."""
+    numeric: Set[str] = set()
+    frozen: Set[str] = set()
+    try:
+        import repro.configs.base as cfgmod
+        from repro.federated.simulator import SimConfig
+        candidates = [getattr(cfgmod, n) for n in dir(cfgmod)
+                      if isinstance(getattr(cfgmod, n), type)]
+        candidates.append(SimConfig)
+        for cls in candidates:
+            if not dataclasses.is_dataclass(cls):
+                continue
+            if getattr(cls, "__dataclass_params__").frozen:
+                frozen.add(cls.__name__)
+            for f in dataclasses.fields(cls):
+                ann = f.type if isinstance(f.type, str) else getattr(
+                    f.type, "__name__", str(f.type))
+                if _numeric_annotation(str(ann)):
+                    numeric.add(f.name)
+    except Exception:
+        return RepoContext(_FALLBACK_NUMERIC_FIELDS, _FALLBACK_FROZEN_CONFIGS)
+    return RepoContext(frozenset(numeric), frozenset(frozen))
+
+
+# --------------------------------------------------------------------------
+# Shared AST plumbing
+# --------------------------------------------------------------------------
+
+class _Scoped(ast.NodeVisitor):
+    """Visitor that tracks the enclosing Class.func dotted chain."""
+
+    def __init__(self):
+        self.stack: List[str] = []
+
+    @property
+    def context(self) -> str:
+        return ".".join(self.stack)
+
+    def visit_ClassDef(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _snippet(src_lines: List[str], lineno: int) -> str:
+    if 1 <= lineno <= len(src_lines):
+        return src_lines[lineno - 1].strip()
+    return ""
+
+
+def _mk(rule: str, path: str, node: ast.AST, message: str, context: str,
+        src_lines: List[str]) -> Finding:
+    line = getattr(node, "lineno", 1)
+    return Finding(rule=rule, path=path, line=line, message=message,
+                   context=context, snippet=_snippet(src_lines, line))
+
+
+def _attr_tokens(node: ast.AST) -> Set[str]:
+    """All Name ids and Attribute attrs in a subtree."""
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.add(n.value)
+    return out
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for Attribute/Name chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# --------------------------------------------------------------------------
+# Rule registry
+# --------------------------------------------------------------------------
+
+RULES: Dict[str, Callable] = {}
+
+
+def rule(rule_id: str):
+    def deco(fn):
+        RULES[rule_id] = fn
+        return fn
+    return deco
+
+
+# --------------------------------------------------------------------------
+# truthiness-on-config
+# --------------------------------------------------------------------------
+
+@rule("truthiness-on-config")
+def check_truthiness(tree: ast.Module, path: str, src_lines: List[str],
+                     ctx: RepoContext) -> List[Finding]:
+    fields = ctx.numeric_fields
+    findings: List[Finding] = []
+
+    class V(_Scoped):
+        def _flag(self, expr, how):
+            name = expr.attr if isinstance(expr, ast.Attribute) else expr.id
+            findings.append(_mk(
+                "truthiness-on-config", path, expr,
+                f"truthiness on numeric config field {name!r} ({how}): "
+                f"0/0.0 are valid values — compare explicitly "
+                f"(`is None` / `> 0`)", self.context, src_lines))
+
+        def _bool_ctx(self, expr):
+            # `a or default` — only the tested (non-final) operands of an
+            # `or`, every operand of an `and`, plain attr/name tests
+            if isinstance(expr, ast.BoolOp):
+                vals = expr.values
+                tested = vals[:-1] if isinstance(expr.op, ast.Or) else vals
+                for v in tested:
+                    self._bool_ctx(v)
+                return
+            if isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.Not):
+                self._bool_ctx(expr.operand)
+                return
+            if isinstance(expr, ast.Attribute) and expr.attr in fields:
+                self._flag(expr, "boolean test")
+            elif isinstance(expr, ast.Name) and expr.id in fields:
+                self._flag(expr, "boolean test")
+
+        def visit_If(self, node):
+            self._bool_ctx(node.test)
+            self.generic_visit(node)
+
+        def visit_While(self, node):
+            self._bool_ctx(node.test)
+            self.generic_visit(node)
+
+        def visit_IfExp(self, node):
+            self._bool_ctx(node.test)
+            self.generic_visit(node)
+
+        def visit_Assert(self, node):
+            self._bool_ctx(node.test)
+            self.generic_visit(node)
+
+        def visit_comprehension(self, node):
+            for if_ in node.ifs:
+                self._bool_ctx(if_)
+            self.generic_visit(node)
+
+        def visit_BoolOp(self, node):
+            # value-position `x or default` (assignments, call args, ...)
+            if isinstance(node.op, ast.Or):
+                for v in node.values[:-1]:
+                    if isinstance(v, ast.Attribute) and v.attr in fields:
+                        self._flag(v, "`or` default")
+                    elif isinstance(v, ast.Name) and v.id in fields:
+                        self._flag(v, "`or` default")
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# low-precision-accumulation
+# --------------------------------------------------------------------------
+
+_LOW_TOKENS = {"bfloat16", "bf16", "float16", "fp16", "float8_e4m3",
+               "float8_e4m3fn", "float8_e5m2", "fp8", "int8"}
+_SAFE_TOKENS = {"float32", "float64", "f32", "promote_types",
+                "preferred_element_type", "result_type"}
+_REDUCE_ATTRS = {"sum", "dot", "matmul", "tensordot", "einsum", "vdot",
+                 "cumsum", "scan"}
+
+
+@rule("low-precision-accumulation")
+def check_low_precision(tree: ast.Module, path: str, src_lines: List[str],
+                        ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    class V(_Scoped):
+        def __init__(self):
+            super().__init__()
+            # one-level local-name resolution: x = <expr> lets the checker
+            # see through `acc_t = jnp.promote_types(...)` then
+            # `.astype(acc_t)`
+            self.local_tokens: Dict[str, Set[str]] = {}
+
+        def visit_Assign(self, node):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.local_tokens[t.id] = _attr_tokens(node.value)
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            attr = node.func.attr if isinstance(node.func, ast.Attribute) \
+                else (node.func.id if isinstance(node.func, ast.Name)
+                      else "")
+            if attr in _REDUCE_ATTRS:
+                tokens = _attr_tokens(node)
+                # resolve one level of local assignments
+                for t in list(tokens):
+                    tokens |= self.local_tokens.get(t, set())
+                if tokens & _LOW_TOKENS and not tokens & _SAFE_TOKENS:
+                    low = ", ".join(sorted(tokens & _LOW_TOKENS))
+                    findings.append(_mk(
+                        "low-precision-accumulation", path, node,
+                        f"`{attr}` accumulates over {low} operands with no "
+                        f"fp32 cast / preferred_element_type — low-precision "
+                        f"sums lose small contributions (PR 5 class)",
+                        self.context, src_lines))
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# unkeyed-config-cache
+# --------------------------------------------------------------------------
+
+_CONFIGISH = ("cfg", "config", "params", "tree", "state", "fed", "template")
+
+
+def _is_cache_decorator(dec: ast.AST) -> bool:
+    target = dec.func if isinstance(dec, ast.Call) else dec
+    name = _dotted(target)
+    return name.split(".")[-1] in ("lru_cache", "cache")
+
+
+@rule("unkeyed-config-cache")
+def check_unkeyed_cache(tree: ast.Module, path: str, src_lines: List[str],
+                        ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+    frozen = ctx.frozen_configs
+
+    class V(_Scoped):
+        def visit_FunctionDef(self, node):
+            if any(_is_cache_decorator(d) for d in node.decorator_list):
+                args = list(node.args.posonlyargs) + list(node.args.args) \
+                    + list(node.args.kwonlyargs)
+                for a in args:
+                    if a.arg in ("self", "cls"):
+                        continue
+                    if a.annotation is not None:
+                        tokens = _attr_tokens(a.annotation)
+                        if tokens & frozen:
+                            continue        # frozen config: a sound key
+                        if tokens <= _SCALAR_ANNOTATIONS:
+                            continue        # hashable scalar key
+                        findings.append(_mk(
+                            "unkeyed-config-cache", path, node,
+                            f"lru_cache parameter {a.arg!r} annotated "
+                            f"{ast.unparse(a.annotation)!r} is not a frozen "
+                            f"config or hashable scalar — the cache key may "
+                            f"not cover the wire-relevant fields (PR 5 "
+                            f"class)", self.context, src_lines))
+                    elif a.arg.endswith(_CONFIGISH):
+                        findings.append(_mk(
+                            "unkeyed-config-cache", path, node,
+                            f"lru_cache parameter {a.arg!r} is unannotated "
+                            f"and config-like — key the cache on explicit "
+                            f"frozen scalars (PR 5 class)",
+                            self.context, src_lines))
+            _Scoped.visit_FunctionDef(self, node)
+
+    V().visit(tree)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# host-sync-in-jit
+# --------------------------------------------------------------------------
+
+_SYNC_CALLS = {"item", "block_until_ready", "device_get", "asarray",
+               "array", "print"}
+_HOST_MODULES = {"np", "numpy", "time"}
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """`jax.jit`, `jit`, or functools.partial(jax.jit, ...)."""
+    name = _dotted(node)
+    if name.split(".")[-1] == "jit":
+        return True
+    if isinstance(node, ast.Call) and _dotted(node.func).endswith("partial"):
+        return any(_is_jit_expr(a) for a in node.args)
+    return False
+
+
+def _returned_inner_defs(maker: ast.FunctionDef) -> List[ast.FunctionDef]:
+    """Nested defs a factory returns (`def f(): ... ; return f`)."""
+    inner = {n.name: n for n in maker.body
+             if isinstance(n, ast.FunctionDef)}
+    out = []
+    for n in ast.walk(maker):
+        if isinstance(n, ast.Return) and isinstance(n.value, ast.Name) \
+                and n.value.id in inner:
+            out.append(inner[n.value.id])
+    return out
+
+
+@rule("host-sync-in-jit")
+def check_host_sync(tree: ast.Module, path: str, src_lines: List[str],
+                    ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    # every function node with its enclosing maker (if nested)
+    makers: Dict[str, ast.FunctionDef] = {}
+    for n in ast.walk(tree):
+        if isinstance(n, ast.FunctionDef):
+            makers[n.name] = n
+
+    traced: Set[ast.FunctionDef] = set()
+
+    # (a) jit-decorated defs
+    for fn in makers.values():
+        if any(_is_jit_expr(d if not isinstance(d, ast.Call) else d)
+               for d in fn.decorator_list):
+            traced.add(fn)
+
+    # (b) jax.jit(<maker>()) / jax.jit(<fn>) anywhere in the module
+    def _mark_jit_arg(arg: ast.AST):
+        if isinstance(arg, ast.Name) and arg.id in makers:
+            traced.add(makers[arg.id])
+        elif isinstance(arg, ast.Call):
+            mname = _dotted(arg.func).split(".")[-1]
+            if mname in makers:
+                traced.update(_returned_inner_defs(makers[mname]))
+
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Call) and _is_jit_expr(n.func):
+            for a in n.args:
+                _mark_jit_arg(a)
+
+    # (c) fixpoint over cross-maker closures: inside a maker whose inner def
+    # is traced, `f = self._make_x()` binds f to _make_x's returned def; if
+    # the traced def calls f, that returned def is traced too
+    changed = True
+    while changed:
+        changed = False
+        for maker in makers.values():
+            inner_traced = [d for d in maker.body
+                            if isinstance(d, ast.FunctionDef) and d in traced]
+            if not inner_traced:
+                continue
+            bindings: Dict[str, str] = {}
+            for st in maker.body:
+                if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                        and isinstance(st.targets[0], ast.Name) \
+                        and isinstance(st.value, ast.Call):
+                    mname = _dotted(st.value.func).split(".")[-1]
+                    if mname in makers:
+                        bindings[st.targets[0].id] = mname
+            for tfn in inner_traced:
+                for n in ast.walk(tfn):
+                    if isinstance(n, ast.Call) and isinstance(n.func,
+                                                              ast.Name) \
+                            and n.func.id in bindings:
+                        for d in _returned_inner_defs(
+                                makers[bindings[n.func.id]]):
+                            if d not in traced:
+                                traced.add(d)
+                                changed = True
+
+    # nested defs inside traced defs are traced
+    stack = list(traced)
+    while stack:
+        fn = stack.pop()
+        for n in ast.walk(fn):
+            if isinstance(n, ast.FunctionDef) and n is not fn \
+                    and n not in traced:
+                traced.add(n)
+                stack.append(n)
+
+    for fn in sorted(traced, key=lambda f: f.lineno):
+        for n in ast.walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            dn = _dotted(n.func)
+            leaf = dn.split(".")[-1]
+            root = dn.split(".")[0] if dn else ""
+            bad = None
+            if leaf in ("float", "int", "bool") and dn == leaf and n.args \
+                    and not isinstance(n.args[0], ast.Constant):
+                bad = f"{leaf}() forces a host sync"
+            elif leaf == "item":
+                bad = ".item() forces a host sync"
+            elif root in _HOST_MODULES:
+                bad = f"host call {dn}() inside a traced body"
+            elif leaf in ("device_get", "block_until_ready", "print"):
+                bad = f"{leaf}() inside a traced body"
+            if bad:
+                findings.append(_mk(
+                    "host-sync-in-jit", path, n,
+                    f"{bad} in jit-traced `{fn.name}` — move it to the "
+                    f"round's single sanctioned device_get",
+                    fn.name, src_lines))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# timer-without-barrier (benchmarks/ only)
+# --------------------------------------------------------------------------
+
+_CLOCKS = {"time.time", "time.perf_counter", "time.monotonic"}
+_BARRIER_TOKENS = ("block_until_ready", "device_get")
+
+
+@rule("timer-without-barrier")
+def check_timer_barrier(tree: ast.Module, path: str, src_lines: List[str],
+                        ctx: RepoContext) -> List[Finding]:
+    if not (path.startswith("benchmarks/") or "/benchmarks/" in path):
+        return []
+    findings: List[Finding] = []
+
+    class V(_Scoped):
+        def visit_FunctionDef(self, node):
+            starts: Dict[str, int] = {}
+            for n in ast.walk(node):
+                if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                        and isinstance(n.targets[0], ast.Name) \
+                        and isinstance(n.value, ast.Call) \
+                        and _dotted(n.value.func) in _CLOCKS:
+                    starts[n.targets[0].id] = n.lineno
+            for n in ast.walk(node):
+                if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Sub) \
+                        and isinstance(n.right, ast.Name) \
+                        and n.right.id in starts \
+                        and isinstance(n.left, ast.Call) \
+                        and _dotted(n.left.func) in _CLOCKS:
+                    start, stop = starts[n.right.id], n.lineno
+                    window = "\n".join(src_lines[start:stop])
+                    if not any(t in window for t in _BARRIER_TOKENS):
+                        findings.append(_mk(
+                            "timer-without-barrier", path, n,
+                            f"timed interval started at line {start} stops "
+                            f"with no block_until_ready/device_get between "
+                            f"— async dispatch makes the measurement a "
+                            f"lower bound", self.context, src_lines))
+            _Scoped.visit_FunctionDef(self, node)
+
+    V().visit(tree)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# unbounded-host-accumulator
+# --------------------------------------------------------------------------
+
+def _is_growable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict)):
+        return True
+    if isinstance(node, ast.Call) and _dotted(node.func) in ("list", "dict"):
+        return True
+    return False
+
+
+@rule("unbounded-host-accumulator")
+def check_unbounded_accumulator(tree: ast.Module, path: str,
+                                src_lines: List[str],
+                                ctx: RepoContext) -> List[Finding]:
+    findings: List[Finding] = []
+
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        inits: Dict[str, ast.AST] = {}        # attr -> first growable bind
+        rebinds: Dict[str, int] = {}          # attr -> rebind count
+        appends: Dict[str, ast.AST] = {}      # attr -> first append site
+        clears: Set[str] = set()
+
+        for n in ast.walk(cls):
+            if isinstance(n, (ast.Assign, ast.AnnAssign)):
+                targets = n.targets if isinstance(n, ast.Assign) \
+                    else [n.target]
+                value = n.value
+                for t in targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        if value is not None and _is_growable_literal(value):
+                            if t.attr in inits:
+                                rebinds[t.attr] = rebinds.get(t.attr, 0) + 1
+                            else:
+                                inits[t.attr] = n
+                        elif t.attr in inits:
+                            rebinds[t.attr] = rebinds.get(t.attr, 0) + 1
+            elif isinstance(n, ast.Call) \
+                    and isinstance(n.func, ast.Attribute):
+                obj = n.func.value
+                if isinstance(obj, ast.Attribute) \
+                        and isinstance(obj.value, ast.Name) \
+                        and obj.value.id == "self":
+                    if n.func.attr in ("append", "extend", "insert",
+                                       "setdefault", "update"):
+                        appends.setdefault(obj.attr, n)
+                    elif n.func.attr in ("clear", "pop", "popleft"):
+                        clears.add(obj.attr)
+
+        for attr, site in appends.items():
+            if attr in inits and attr not in clears \
+                    and rebinds.get(attr, 0) == 0:
+                findings.append(_mk(
+                    "unbounded-host-accumulator", path, site,
+                    f"self.{attr} grows without reset/bound across the "
+                    f"{cls.name} lifetime — use a bounded structure or "
+                    f"reset per run (PR 6 staleness_seen class)",
+                    cls.name, src_lines))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Runner
+# --------------------------------------------------------------------------
+
+def run_ast_rules(root: str, targets: Tuple[str, ...] = ("src", "benchmarks",
+                                                         "examples"),
+                  ctx: Optional[RepoContext] = None,
+                  rules: Optional[Dict[str, Callable]] = None
+                  ) -> List[Finding]:
+    """Run every registered rule over the target trees; returns findings."""
+    import os
+
+    ctx = build_context() if ctx is None else ctx
+    rules = RULES if rules is None else rules
+    findings: List[Finding] = []
+    for target in targets:
+        base = os.path.join(root, target)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, fname)
+                rel = os.path.relpath(full, root).replace(os.sep, "/")
+                findings.extend(check_source_file(full, rel, ctx, rules))
+    return findings
+
+
+def check_source_file(full_path: str, rel_path: str,
+                      ctx: Optional[RepoContext] = None,
+                      rules: Optional[Dict[str, Callable]] = None
+                      ) -> List[Finding]:
+    ctx = build_context() if ctx is None else ctx
+    rules = RULES if rules is None else rules
+    with open(full_path) as f:
+        src = f.read()
+    return check_source(src, rel_path, ctx, rules)
+
+
+def check_source(src: str, rel_path: str, ctx: Optional[RepoContext] = None,
+                 rules: Optional[Dict[str, Callable]] = None
+                 ) -> List[Finding]:
+    """Run the rules over one source string (tests feed fixtures here)."""
+    ctx = build_context() if ctx is None else ctx
+    rules = RULES if rules is None else rules
+    tree = ast.parse(src)
+    src_lines = src.splitlines()
+    findings: List[Finding] = []
+    for checker in rules.values():
+        findings.extend(checker(tree, rel_path, src_lines, ctx))
+    return findings

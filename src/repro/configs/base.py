@@ -107,7 +107,9 @@ class ModelConfig:
     # --- derived ----------------------------------------------------------
     @property
     def resolved_head_dim(self) -> int:
-        return self.head_dim or self.d_model // self.n_heads
+        # explicit 0-sentinel comparison, not truthiness (truthiness-on-config)
+        return self.head_dim if self.head_dim > 0 \
+            else self.d_model // self.n_heads
 
     def blocks(self) -> Tuple[str, ...]:
         if self.block_pattern:
@@ -167,10 +169,10 @@ class ModelConfig:
         kw = dict(
             n_layers=2, d_model=min(self.d_model, 256),
             n_heads=min(self.n_heads, 4),
-            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff > 0 else 0,
             vocab_size=min(self.vocab_size, 512),
             max_seq_len=256,
-            head_dim=64 if self.head_dim else 0,
+            head_dim=64 if self.head_dim > 0 else 0,
         )
         kw["n_kv_heads"] = min(self.n_kv_heads, kw["n_heads"])
         if self.moe is not None:
@@ -190,9 +192,9 @@ class ModelConfig:
             kw["block_pattern"] = self.block_pattern[:2]
         if self.is_encoder_decoder:
             kw["n_encoder_layers"] = 2
-        if self.n_patch_tokens:
+        if self.n_patch_tokens > 0:
             kw["n_patch_tokens"] = 16
-        if self.sliding_window:
+        if self.sliding_window > 0:
             kw["sliding_window"] = min(self.sliding_window, 128)
         return replace(self, **kw)
 

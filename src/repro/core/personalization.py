@@ -69,5 +69,6 @@ def personalized_accuracy(params, apply_fn, head_key, client_train,
         p = calibrate_head(params, apply_fn, head_key, xtr, ytr,
                            jnp.asarray(cts), **kw)
         logits = apply_fn(p, jnp.asarray(xte))
-        accs.append(float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte))))
-    return float(np.mean(accs)) if accs else 0.0
+        accs.append(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(yte)))
+    # device scalars accumulate; one explicit fetch (host-sync-in-jit hygiene)
+    return float(np.mean(jax.device_get(accs))) if accs else 0.0

@@ -118,6 +118,13 @@ class FedAvg:
         return T.sub(theta_t, mean_delta), server_state
 
 
+def _theta_step(theta_t, m, fed):
+    """θ_{t+1} = θ_t − α·η·m, computed in fp32 and cast back to the
+    parameter dtype (the fp32 momentum must not promote bf16 parameters)."""
+    theta = T.axpy(-fed.alpha * fed.eta, m, T.cast(theta_t, jnp.float32))
+    return jax.tree.map(lambda nt, t: nt.astype(t.dtype), theta, theta_t)
+
+
 # ---------------------------------------------------------------------------
 # SlowMo (Alg. 2) — server momentum over pseudo gradients.
 # ---------------------------------------------------------------------------
@@ -125,12 +132,17 @@ class SlowMo(FedAvg):
     name = "slowmo"
 
     def server_init(self, params):
-        return {"m": T.zeros_like(params)}
+        # the momentum accumulates Δ̄ across rounds: it is held in fp32
+        # regardless of the parameter/wire dtype (a bf16 m loses small
+        # late-round pseudo-gradients — the fp32 cast-on-write contract,
+        # server side; checked by the trace-accumulation-dtype audit)
+        return {"m": T.cast(T.zeros_like(params), jnp.float32)}
 
     def server_update(self, server_state, theta_t, mean_delta, fed):
-        g_bar = T.scale(mean_delta, 1.0 / fed.eta)          # line 12
+        g_bar = T.scale(T.cast(mean_delta, jnp.float32),
+                        1.0 / fed.eta)                      # line 12
         m = T.axpy(fed.beta_global, server_state["m"], g_bar)  # line 14
-        theta = T.axpy(-fed.alpha * fed.eta, m, theta_t)    # line 16
+        theta = _theta_step(theta_t, m, fed)                # line 16
         return theta, {"m": m}
 
 
@@ -144,12 +156,17 @@ class FedADC(FedAvg):
     name = "fedadc"
 
     def server_init(self, params):
-        return {"m": T.zeros_like(params)}
+        # fp32 momentum independent of the parameter/wire dtype — see
+        # SlowMo.server_init
+        return {"m": T.cast(T.zeros_like(params), jnp.float32)}
 
     def client_setup(self, server_state, params, fed):
-        # line 5: m̄_t = β_local · m_t / H
-        return {"m_bar": T.scale(server_state["m"],
-                                 fed.beta_local / fed.local_steps)}
+        # line 5: m̄_t = β_local · m_t / H, broadcast in the params dtype
+        # (the fp32 momentum must not promote a bf16 wire)
+        m_bar = T.scale(server_state["m"],
+                        fed.beta_local / fed.local_steps)
+        return {"m_bar": jax.tree.map(lambda m, p: m.astype(p.dtype),
+                                      m_bar, params)}
 
     # ctx broadcast leaves are an exact scalar image of the θ-delta
     # (server_update: Δθ_t = −α·η·m_t while m̄_t = β_l/H · m_t), so the
@@ -180,10 +197,11 @@ class FedADC(FedAvg):
         return theta_new, extra, aux
 
     def server_update(self, server_state, theta_t, mean_delta, fed):
-        delta_bar = T.scale(mean_delta, 1.0 / fed.eta)      # line 16
+        delta_bar = T.scale(T.cast(mean_delta, jnp.float32),
+                            1.0 / fed.eta)                  # line 16
         m = T.axpy(fed.beta_global - fed.beta_local,
                    server_state["m"], delta_bar)            # line 17
-        theta = T.axpy(-fed.alpha * fed.eta, m, theta_t)    # line 19
+        theta = _theta_step(theta_t, m, fed)                # line 19
         return theta, {"m": m}
 
 
@@ -194,8 +212,10 @@ class FedADCDouble(FedADC):
     name = "fedadc_double"
 
     def client_setup(self, server_state, params, fed):
-        return {"m_bar": T.scale(server_state["m"],
-                                 fed.beta_global / fed.local_steps)}
+        m_bar = T.scale(server_state["m"],
+                        fed.beta_global / fed.local_steps)
+        return {"m_bar": jax.tree.map(lambda m, p: m.astype(p.dtype),
+                                      m_bar, params)}
 
     def _ctx_scale(self, fed):
         # Alg. 4 broadcasts m̄_t = β_g/H · m_t against the same Δθ = −αη·m_t
@@ -218,8 +238,9 @@ class FedADCDouble(FedADC):
         return theta_new, {"m_local": m_local, "tau": extra["tau"] + 1}, aux
 
     def server_update(self, server_state, theta_t, mean_delta, fed):
-        m = T.scale(mean_delta, 1.0 / fed.eta)               # line 21 (no carry)
-        theta = T.axpy(-fed.alpha * fed.eta, m, theta_t)     # line 23
+        m = T.scale(T.cast(mean_delta, jnp.float32),
+                    1.0 / fed.eta)                           # line 21 (no carry)
+        theta = _theta_step(theta_t, m, fed)                 # line 23
         return theta, {"m": m}
 
 

@@ -36,8 +36,9 @@ ClientSystemModel RandomState in event order.
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +51,8 @@ from repro.federated import aggregation as A
 from repro.federated.hetero import ClientSystemModel, staleness_discount
 from repro.federated.simulator import FederatedSimulator, SimConfig
 from repro.telemetry import drift as drift_metrics
+
+EVENT_LOG_MAXLEN = 65536
 
 # Strategies with per-client cross-round state cannot ride the async engine
 # (a stale client would need its state rolled forward); same restriction as
@@ -89,7 +92,10 @@ class AsyncFederatedSimulator(FederatedSimulator):
         self._bcast_fn = jax.jit(self._make_bcast_fn())
         self.version = 0              # number of server updates applied
         self.vtime = 0.0              # virtual clock
-        self.event_log: List[tuple] = []   # (kind, time, client, version)
+        # (kind, time, client, version) events; bounded so a long-lived
+        # engine cannot grow host memory without limit (the staleness_seen
+        # class) — 64k events cover ~10k rounds of scheduling history
+        self.event_log: Deque[tuple] = deque(maxlen=EVENT_LOG_MAXLEN)
         # bounded staleness summary, reset at each run() — replaces the
         # old unbounded staleness_seen list that double-counted across
         # consecutive run() calls
@@ -125,7 +131,11 @@ class AsyncFederatedSimulator(FederatedSimulator):
         R_{v−1} and advances it to the new reconstruction R_v."""
         if self._bcast_cache is None or self._bcast_cache[0] != self.version:
             key = jax.random.fold_in(
-                jax.random.fold_in(self._comp_key, 0xB0), self.version)
+                # explicit uint32 transfer of the version counter (a bare
+                # Python int would be an implicit H2D under transfer guard)
+                jax.random.fold_in(self._comp_key,
+                                   jnp.asarray(np.asarray(0xB0, np.uint32))),
+                jnp.asarray(np.asarray(self.version, np.uint32)))
             with self.telemetry.tracer.span("transport.encode") as sp:
                 params_w, ctx, new_ref = self._bcast_fn(
                     self.params, self.server_state, self._down_ref, key)
@@ -231,7 +241,9 @@ class AsyncFederatedSimulator(FederatedSimulator):
             counts = jnp.asarray(self.counts[np.asarray(group)])
             cstates = self._get_client_states(group)
             efs = self._get_ef_states(group)
-            gkey = jax.random.fold_in(self._comp_key, self._dispatch_ctr)
+            gkey = jax.random.fold_in(
+                self._comp_key,
+                jnp.asarray(np.asarray(self._dispatch_ctr, np.uint32)))
             keys = jax.random.split(gkey, len(group))
             self._dispatch_ctr += 1
             with self.telemetry.tracer.span("local_train") as sp:
@@ -241,6 +253,10 @@ class AsyncFederatedSimulator(FederatedSimulator):
                     sp.sync = deltas
             if self.ef_enabled:
                 self._put_ef_states(group, new_efs)
+            # one explicit host fetch for the group's losses instead of a
+            # per-client implicit sync in the loop below (host-sync-in-jit
+            # hygiene: deltas stay on device, scalars cross once)
+            losses = np.asarray(jax.device_get(losses))
             # every dispatched client receives the (θ_t, ctx) broadcast —
             # downlink bytes are paid at dispatch (dropped uploads lose the
             # uplink only), and version 0's broadcast is the full initial
@@ -250,7 +266,11 @@ class AsyncFederatedSimulator(FederatedSimulator):
             for j, c in enumerate(group):
                 rec = _InFlight(
                     client=c, version=self.version,
-                    delta=jax.tree.map(lambda x: x[j], deltas),
+                    # static slice: x[j] would gather with a device-side
+                    # index (an implicit H2D transfer per client)
+                    delta=jax.tree.map(
+                        lambda x: jax.lax.index_in_dim(x, j, keepdims=False),
+                        deltas),
                     loss=float(losses[j]),
                     n_examples=float(len(self.parts[c])),
                     delta_scale=self.system.delta_scale(c),
@@ -266,9 +286,12 @@ class AsyncFederatedSimulator(FederatedSimulator):
         self.staleness_hist.observe_many(int(s) for s in stale)
         disc = staleness_discount(stale, fed.staleness_mode,
                                   fed.staleness_factor)
-        scales = jnp.asarray(
-            disc * np.asarray([r.delta_scale for r in buffer]), jnp.float32)
-        n_ex = jnp.asarray([r.n_examples for r in buffer], jnp.float32)
+        # np first, then one explicit device_put each: jnp.asarray(host,
+        # dtype) would convert on device (an implicit transfer)
+        scales = jnp.asarray(np.asarray(
+            disc * np.asarray([r.delta_scale for r in buffer]), np.float32))
+        n_ex = jnp.asarray(np.asarray([r.n_examples for r in buffer],
+                                      np.float32))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *[r.delta for r in buffer])
         with tel.tracer.span("aggregate") as sp:
@@ -292,12 +315,15 @@ class AsyncFederatedSimulator(FederatedSimulator):
         """Run until `rounds` server updates have been applied.  History
         entries carry the virtual time `t` of each update so wall-clock-to-
         accuracy comparisons against the synchronous engines are direct."""
-        rounds = rounds or self.sim.rounds
+        # explicit None check: run(rounds=0) is a valid no-op request and
+        # must not fall back to sim.rounds (truthiness-on-config)
+        rounds = self.sim.rounds if rounds is None else rounds
         fed = self.fed
         # per-run staleness summary: a fresh run() must not double-count
         # the previous run's observations
         self.staleness_hist.reset()
-        K = fed.buffer_k or fed.clients_per_round
+        # buffer_k == 0 is the documented synchronous-barrier sentinel
+        K = fed.buffer_k if fed.buffer_k > 0 else fed.clients_per_round
         inflight = max(fed.clients_per_round, K)
         heap: list = []
         buffer: List[_InFlight] = []

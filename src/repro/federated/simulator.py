@@ -339,12 +339,15 @@ class FederatedSimulator:
         return self.x_train[sel], self.y_train[sel]
 
     def evaluate(self) -> float:
-        n, correct = len(self.x_test), 0
+        n = len(self.x_test)
         b = self.sim.eval_batch
-        for i in range(0, n, b):
-            correct += int(self._eval_fn(self.params,
-                                         jnp.asarray(self.x_test[i:i + b]),
-                                         jnp.asarray(self.y_test[i:i + b])))
+        # device-resident partial sums; one explicit host fetch at the end
+        # (host-sync-in-jit hygiene: no per-batch implicit int() syncs)
+        parts = [self._eval_fn(self.params,
+                               jnp.asarray(self.x_test[i:i + b]),
+                               jnp.asarray(self.y_test[i:i + b]))
+                 for i in range(0, n, b)]
+        correct = int(np.sum(jax.device_get(parts)))
         return correct / n
 
     def run(self, rounds: Optional[int] = None, log_fn: Callable = None):
@@ -362,14 +365,21 @@ class FederatedSimulator:
             yb = jnp.asarray(np.stack(ys))
             counts = jnp.asarray(self.counts[picks])
             cstates = self._get_client_states(picks)
-            n_examples = jnp.asarray([len(self.parts[int(c)]) for c in picks],
-                                     jnp.float32)
+            # np first, then one explicit device_put: jnp.asarray(list,
+            # dtype) would convert on device (an implicit transfer)
+            n_examples = jnp.asarray(np.asarray(
+                [len(self.parts[int(c)]) for c in picks], np.float32))
             efs = self._get_ef_states(picks)
             with tel.tracer.span("round") as sp:
                 (self.params, self.server_state, ncs, nefs, loss,
                  new_ref, metrics) = self._round_fn(
                     self.params, self.server_state, xb, yb, counts, cstates,
-                    n_examples, efs, jax.random.fold_in(self._comp_key, t),
+                    n_examples, efs,
+                    # explicit uint32 transfer of the round counter — a bare
+                    # Python int would be an implicit H2D (transfer guard)
+                    jax.random.fold_in(
+                        self._comp_key,
+                        jnp.asarray(np.asarray(t, np.uint32))),
                     self._down_ref)
                 if tel.enabled:
                     # span stops after the round's device work, not after
@@ -392,8 +402,10 @@ class FederatedSimulator:
                 tel.record_round(t, {**metrics, "loss": float(loss_h)})
             if (t + 1) % self.sim.eval_every == 0 or t == rounds - 1:
                 acc = self.evaluate()
+                # explicit device_get — with telemetry off this is the
+                # round's single sanctioned host fetch
                 tel.record_eval({"round": t + 1, "acc": acc,
-                                 "loss": float(loss)})
+                                 "loss": float(jax.device_get(loss))})
                 if log_fn:
                     log_fn(self.history[-1])
         return self.history

@@ -46,11 +46,13 @@ class ClientStore:
     def __init__(self):
         self._ns: Dict[str, Dict[int, Any]] = {}
         self._init: Dict[str, Callable[[], Any]] = {}
+        self._template: Dict[str, Any] = {}
 
     def register(self, name: str, init_fn: Callable[[], Any]) -> None:
         """Declare a namespace; `init_fn()` builds one client's fresh state."""
         self._ns.setdefault(name, {})
         self._init[name] = init_fn
+        self._template.pop(name, None)
 
     def namespaces(self):
         return tuple(self._ns)
@@ -66,16 +68,26 @@ class ClientStore:
         states = []
         for c in picks:
             s = store.get(int(c))
-            # `is None`, not truthiness: a stored state whose pytree happens
-            # to be falsy (e.g. a zero scalar) must not be re-initialised
-            states.append(init_fn() if s is None else s)
+            if s is None:
+                # `is None`, not truthiness: a stored state whose pytree
+                # happens to be falsy (e.g. a zero scalar) must not be
+                # re-initialised.  The fresh template is built once per
+                # namespace and reused — a steady-state gather performs no
+                # new host->device transfer (transfer-guard clean).
+                if name not in self._template:
+                    self._template[name] = init_fn()
+                s = self._template[name]
+            states.append(s)
         return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
     def scatter(self, name: str, picks: Sequence[int], stacked) -> None:
         """Write each pick's slice of the stacked pytree back to its slot."""
         store = self._ns[name]
         for j, c in enumerate(picks):
-            store[int(c)] = jax.tree.map(lambda x: x[j], stacked)
+            # static slice: x[j] would gather with a device-side index
+            # (an implicit H2D transfer per client under transfer guard)
+            store[int(c)] = jax.tree.map(
+                lambda x: jax.lax.index_in_dim(x, j, keepdims=False), stacked)
 
 
 # ---------------------------------------------------------------------------

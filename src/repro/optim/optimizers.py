@@ -13,7 +13,7 @@ from repro.core import tree as T
 
 
 def sgd_update(params, grads, lr, weight_decay=0.0):
-    if weight_decay:
+    if weight_decay > 0:
         grads = T.axpy(weight_decay, params, grads)
     return jax.tree.map(lambda p, g: p - lr * g, params, grads)
 
@@ -24,7 +24,7 @@ def momentum_init(params):
 
 def momentum_update(params, grads, state, lr, beta=0.9, weight_decay=0.0,
                     nesterov=False):
-    if weight_decay:
+    if weight_decay > 0:
         grads = T.axpy(weight_decay, params, grads)
     m = T.axpy(beta, state, grads)
     upd = T.axpy(beta, m, grads) if nesterov else m

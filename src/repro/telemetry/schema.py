@@ -38,6 +38,10 @@ EVENT_SCHEMA: Dict[str, Dict[str, tuple]] = {
     "request": {"rid": (int,), "n_tokens": (int,), "ttft_s": _NUM,
                 "itl_s": _NUM + (type(None),), "e2e_s": _NUM},
     "summary": {"counters": (dict,)},
+    # static-analysis findings (repro.analysis) ride the same envelope so
+    # the CI artifact is consumable by any telemetry JSONL reader
+    "finding": {"rule": (str,), "path": (str,), "line": (int,),
+                "message": (str,)},
 }
 
 

@@ -5,5 +5,23 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+
+@pytest.fixture
+def steady_state_guard():
+    """Warmup-then-guard transfer discipline (DESIGN.md §Static analysis).
+
+    Returns a zero-arg factory for a ``jax.transfer_guard("disallow")``
+    context.  The pattern: run the code path once UN-guarded (compilation
+    and the initial host->device sync of params/data are legitimately
+    transfer-heavy), then re-run the steady-state iteration inside the
+    guard.  Any np array silently fed to a jit'd function or fresh device
+    constant materialised per round then fails loudly.  Explicit transfers
+    stay allowed — ``jnp.asarray`` on the round's batch and the round's
+    single sanctioned ``jax.device_get`` at eval ARE the declared
+    wire/fetch points, so no opt-out block is needed around them.
+    """
+    return lambda: jax.transfer_guard("disallow")

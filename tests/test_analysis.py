@@ -1,0 +1,426 @@
+"""Static-analysis subsystem (``repro.analysis``).
+
+Per-rule positive/negative fixture snippets through ``check_source``, the
+committed-baseline contract (clean repo + minimal baseline: no new findings,
+no stale entries), the trace-time audits' clean verdict on the current
+tree, the telemetry-envelope JSONL export, and the CLI exit-code contract.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import RULES, load_baseline, run_ast_rules
+from repro.analysis.ast_rules import RepoContext, build_context, check_source
+from repro.analysis.baseline import Baseline, write_baseline
+from repro.analysis.findings import Finding, findings_to_jsonl, sort_findings
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# deterministic fixture context — the live build_context() is exercised
+# separately below
+CTX = RepoContext(
+    numeric_fields=frozenset({"eval_every", "buffer_k", "head_dim"}),
+    frozen_configs=frozenset({"FedConfig"}))
+
+
+def _check(src, rule, path="src/repro/fixture.py"):
+    return check_source(textwrap.dedent(src), path, ctx=CTX,
+                        rules={rule: RULES[rule]})
+
+
+class TestRuleRegistry:
+    def test_all_issue_rules_registered(self):
+        assert set(RULES) == {
+            "truthiness-on-config", "low-precision-accumulation",
+            "unkeyed-config-cache", "host-sync-in-jit",
+            "timer-without-barrier", "unbounded-host-accumulator"}
+
+    def test_live_context_introspects_configs(self):
+        ctx = build_context()
+        # numeric fields with valid-zero semantics must be present
+        assert {"eval_every", "buffer_k", "head_dim"} <= ctx.numeric_fields
+        # FedConfig is frozen (the transport shim cache depends on it)
+        assert "FedConfig" in ctx.frozen_configs
+        # bool/str fields must NOT be numeric (truthiness on them is fine)
+        assert "use_pallas" not in ctx.numeric_fields
+        assert "strategy" not in ctx.numeric_fields
+
+
+class TestTruthinessOnConfig:
+    def test_if_on_numeric_field_flagged(self):
+        got = _check("""
+            def f(cfg):
+                if cfg.eval_every:
+                    return 1
+        """, "truthiness-on-config")
+        assert len(got) == 1 and "eval_every" in got[0].message
+
+    def test_or_default_flagged(self):
+        got = _check("""
+            def f(cfg):
+                k = cfg.buffer_k or 4
+                return k
+        """, "truthiness-on-config")
+        assert len(got) == 1 and "buffer_k" in got[0].message
+
+    def test_explicit_compare_clean(self):
+        got = _check("""
+            def f(cfg):
+                if cfg.eval_every > 0:
+                    return 1
+                k = cfg.buffer_k if cfg.buffer_k > 0 else 4
+                return k
+        """, "truthiness-on-config")
+        assert got == []
+
+    def test_non_numeric_field_clean(self):
+        got = _check("""
+            def f(cfg):
+                if cfg.use_pallas:
+                    return 1
+        """, "truthiness-on-config")
+        assert got == []
+
+    def test_or_final_operand_not_flagged(self):
+        # `x or cfg.head_dim` — the final operand is the value, not a test
+        got = _check("""
+            def f(x, cfg):
+                return x or cfg.head_dim
+        """, "truthiness-on-config")
+        assert got == []
+
+
+class TestLowPrecisionAccumulation:
+    def test_bf16_sum_flagged(self):
+        got = _check("""
+            import jax.numpy as jnp
+            def f(x):
+                return jnp.sum(x.astype(jnp.bfloat16))
+        """, "low-precision-accumulation")
+        assert len(got) == 1 and "bfloat16" in got[0].message
+
+    def test_local_assignment_resolved(self):
+        got = _check("""
+            import jax.numpy as jnp
+            def f(x):
+                y = x.astype(jnp.bfloat16)
+                return jnp.tensordot(w, y, axes=1)
+        """, "low-precision-accumulation")
+        assert len(got) == 1
+
+    def test_fp32_dtype_kwarg_clean(self):
+        got = _check("""
+            import jax.numpy as jnp
+            def f(x):
+                return jnp.sum(x.astype(jnp.bfloat16), dtype=jnp.float32)
+        """, "low-precision-accumulation")
+        assert got == []
+
+    def test_preferred_element_type_clean(self):
+        got = _check("""
+            import jax
+            import jax.numpy as jnp
+            def f(a, b):
+                lo = a.astype(jnp.bfloat16)
+                return jax.lax.dot(lo, b,
+                                   preferred_element_type=jnp.float32)
+        """, "low-precision-accumulation")
+        assert got == []
+
+
+class TestUnkeyedConfigCache:
+    def test_unannotated_configish_param_flagged(self):
+        got = _check("""
+            import functools
+            @functools.lru_cache(maxsize=None)
+            def make(cfg):
+                return cfg
+        """, "unkeyed-config-cache")
+        assert len(got) == 1 and "cfg" in got[0].message
+
+    def test_frozen_config_annotation_clean(self):
+        got = _check("""
+            import functools
+            @functools.lru_cache(maxsize=None)
+            def make(fed: FedConfig):
+                return fed
+        """, "unkeyed-config-cache")
+        assert got == []
+
+    def test_scalar_annotations_clean(self):
+        got = _check("""
+            import functools
+            @functools.lru_cache(maxsize=None)
+            def make(n: int, name: str, frac: float):
+                return n
+        """, "unkeyed-config-cache")
+        assert got == []
+
+    def test_non_scalar_annotation_flagged(self):
+        got = _check("""
+            import functools
+            @functools.lru_cache(maxsize=None)
+            def make(spec: dict):
+                return spec
+        """, "unkeyed-config-cache")
+        assert len(got) == 1
+
+
+class TestHostSyncInJit:
+    def test_float_in_jit_decorated_flagged(self):
+        got = _check("""
+            import jax
+            @jax.jit
+            def f(x):
+                return float(x)
+        """, "host-sync-in-jit")
+        assert len(got) == 1 and "float()" in got[0].message
+
+    def test_returned_inner_def_of_jitted_maker_flagged(self):
+        got = _check("""
+            import jax
+            def make_step():
+                def step(x):
+                    return x.item()
+                return step
+            step = jax.jit(make_step())
+        """, "host-sync-in-jit")
+        assert len(got) == 1 and ".item()" in got[0].message
+
+    def test_host_helper_outside_jit_clean(self):
+        got = _check("""
+            def summarize(x):
+                return float(x)
+        """, "host-sync-in-jit")
+        assert got == []
+
+    def test_np_call_in_traced_body_flagged(self):
+        got = _check("""
+            import jax
+            import numpy as np
+            @jax.jit
+            def f(x):
+                return np.mean(x)
+        """, "host-sync-in-jit")
+        assert len(got) == 1 and "np.mean" in got[0].message
+
+
+class TestTimerWithoutBarrier:
+    POS = """
+        import time
+        def bench(f, x):
+            t0 = time.perf_counter()
+            f(x)
+            return time.perf_counter() - t0
+    """
+
+    def test_unbarriered_interval_flagged(self):
+        got = _check(self.POS, "timer-without-barrier",
+                     path="benchmarks/bench_fixture.py")
+        assert len(got) == 1 and "block_until_ready" in got[0].message
+
+    def test_barriered_interval_clean(self):
+        got = _check("""
+            import time
+            import jax
+            def bench(f, x):
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(x))
+                return time.perf_counter() - t0
+        """, "timer-without-barrier", path="benchmarks/bench_fixture.py")
+        assert got == []
+
+    def test_rule_scoped_to_benchmarks(self):
+        got = _check(self.POS, "timer-without-barrier",
+                     path="src/repro/not_a_benchmark.py")
+        assert got == []
+
+
+class TestUnboundedHostAccumulator:
+    def test_append_only_attr_flagged(self):
+        got = _check("""
+            class Log:
+                def __init__(self):
+                    self.events = []
+                def add(self, e):
+                    self.events.append(e)
+        """, "unbounded-host-accumulator")
+        assert len(got) == 1 and "events" in got[0].message
+
+    def test_cleared_attr_clean(self):
+        got = _check("""
+            class Log:
+                def __init__(self):
+                    self.events = []
+                def add(self, e):
+                    self.events.append(e)
+                def reset(self):
+                    self.events.clear()
+        """, "unbounded-host-accumulator")
+        assert got == []
+
+    def test_rebound_attr_clean(self):
+        got = _check("""
+            class Log:
+                def __init__(self):
+                    self.events = []
+                def add(self, e):
+                    self.events.append(e)
+                def flush(self):
+                    self.events = []
+        """, "unbounded-host-accumulator")
+        assert got == []
+
+
+# ---------------------------------------------------------------------------
+# baseline contract
+# ---------------------------------------------------------------------------
+class TestBaseline:
+    def test_repo_is_clean_and_baseline_minimal(self):
+        """The committed tree fires no unsuppressed AST finding AND every
+        committed baseline entry still matches (no ghost suppressions)."""
+        baseline = load_baseline(str(ROOT / "analysis_baseline.json"))
+        findings = run_ast_rules(str(ROOT))
+        new, suppressed, stale = baseline.apply(findings)
+        assert new == [], [f.format() for f in new]
+        assert stale == [], stale
+        assert len(suppressed) == len(baseline.entries)
+
+    def test_every_committed_entry_has_written_reason(self):
+        baseline = load_baseline(str(ROOT / "analysis_baseline.json"))
+        for e in baseline.entries:
+            assert e["reason"] and "TODO" not in e["reason"], e
+
+    def test_stale_entry_detected(self):
+        b = Baseline(entries=[{
+            "rule": "truthiness-on-config", "path": "src/gone.py",
+            "context": "", "snippet": "if cfg.rounds:",
+            "reason": "fixture"}])
+        new, suppressed, stale = b.apply([])
+        assert stale == b.entries and new == [] and suppressed == []
+
+    def test_identity_is_line_number_free(self):
+        f1 = Finding("r", "p.py", 10, "msg", context="C.f", snippet="x = 1")
+        f2 = Finding("r", "p.py", 99, "other msg", context="C.f",
+                     snippet="x = 1")
+        assert f1.key() == f2.key()
+
+    def test_missing_baseline_is_empty(self, tmp_path):
+        b = load_baseline(str(tmp_path / "nope.json"))
+        assert b.entries == []
+
+    def test_reasonless_entry_rejected(self, tmp_path):
+        p = tmp_path / "b.json"
+        p.write_text(json.dumps({"version": 1, "entries": [
+            {"rule": "r", "path": "p.py", "context": "", "snippet": "s",
+             "reason": ""}]}))
+        with pytest.raises(ValueError, match="reason"):
+            load_baseline(str(p))
+
+    def test_update_baseline_round_trips(self, tmp_path):
+        p = tmp_path / "b.json"
+        f = Finding("rule-x", "a.py", 3, "m", context="g", snippet="s")
+        write_baseline(str(p), [f], reason="because")
+        b = load_baseline(str(p))
+        new, suppressed, stale = b.apply([f])
+        assert new == [] and stale == [] and suppressed[0].suppressed
+
+
+# ---------------------------------------------------------------------------
+# JSONL export rides the telemetry envelope
+# ---------------------------------------------------------------------------
+class TestJsonlExport:
+    def test_events_validate_and_round_trip(self, tmp_path):
+        from repro.telemetry.schema import validate_event
+        p = tmp_path / "findings.jsonl"
+        fs = [Finding("rule-a", "x.py", 1, "m1"),
+              Finding("rule-b", "y.py", 2, "m2", suppressed=True)]
+        n = findings_to_jsonl(fs, str(p), ts=123.0)
+        assert n == 2
+        lines = [json.loads(l) for l in p.read_text().splitlines()]
+        for ev in lines:
+            validate_event(ev)
+            assert ev["kind"] == "finding" and ev["engine"] == "analysis"
+        assert lines[1]["suppressed"] is True
+
+    def test_sort_is_stable_by_path_line_rule(self):
+        fs = [Finding("b", "z.py", 9, "m"), Finding("a", "a.py", 2, "m"),
+              Finding("a", "a.py", 1, "m")]
+        got = sort_findings(fs)
+        assert [(f.path, f.line) for f in got] == [
+            ("a.py", 1), ("a.py", 2), ("z.py", 9)]
+
+
+# ---------------------------------------------------------------------------
+# Layer 2 subset: the cheap trace audits stay green in tier-1 (the full
+# matrix incl. retrace runs in the CI `analysis` job)
+# ---------------------------------------------------------------------------
+class TestTraceAudits:
+    def test_kernel_coverage_clean(self):
+        from repro.analysis.trace_audit import audit_kernel_coverage
+        assert audit_kernel_coverage(str(ROOT)) == []
+
+    def test_kernel_coverage_detects_missing_oracle(self, tmp_path):
+        from repro.analysis.trace_audit import audit_kernel_coverage
+        k = tmp_path / "src" / "repro" / "kernels"
+        k.mkdir(parents=True)
+        (k / "ops.py").write_text(
+            "def my_kernel(x):\n"
+            "    return pl.pallas_call(_body, interpret=True)(x)\n")
+        (k / "ref.py").write_text("")
+        t = tmp_path / "tests"
+        t.mkdir()
+        (t / "test_kernels.py").write_text("")
+        got = audit_kernel_coverage(str(tmp_path))
+        assert any("my_kernel" in f.message for f in got)
+
+    def test_accumulation_dtype_clean(self):
+        """weighted_reduce jaxprs, the FedADC momentum update (fp32 AND
+        bf16 param regimes), and the pod client-serial scan all hold ≥fp32
+        accumulators."""
+        from repro.analysis.trace_audit import audit_accumulation_dtype
+        got = audit_accumulation_dtype()
+        assert got == [], [f.format() for f in got]
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+class TestCli:
+    def _run(self, *args):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src")
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True, text=True, cwd=str(ROOT), env=env,
+            timeout=300)
+
+    def test_ast_layer_clean_exit_zero(self):
+        r = self._run("--skip-trace", "--require-clean")
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 finding(s)" in r.stdout
+
+    def test_list_rules(self):
+        r = self._run("--list-rules")
+        assert r.returncode == 0
+        for rid in RULES:
+            assert rid in r.stdout
+        assert "trace-retrace" in r.stdout
+
+    def test_unknown_rule_subset_is_usage_error(self):
+        r = self._run("--skip-trace", "--rules", "no-such-rule")
+        assert r.returncode == 2
+
+    def test_jsonl_artifact_written(self, tmp_path):
+        out = tmp_path / "f.jsonl"
+        r = self._run("--skip-trace", "--jsonl", str(out))
+        assert r.returncode == 0
+        lines = [json.loads(l) for l in out.read_text().splitlines()]
+        # the committed baseline's suppressed findings ride the artifact
+        assert lines and all(e["kind"] == "finding" for e in lines)
+        assert all(e["suppressed"] for e in lines)

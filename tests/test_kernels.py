@@ -300,6 +300,21 @@ class TestWeightedReduceFp32Accumulation:
                 np.float64)
             assert np.all(np.abs(got - oracle) <= bound), use_pallas
 
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        """Kernel parity under the transfer guard: after one warmup call
+        (compile + H2D of operands) both the Pallas and the ref reduction
+        run on device-resident operands with no implicit transfer, and
+        still agree."""
+        d, w, _, _ = self._operands()
+        ops.weighted_delta_reduce({"x": d}, w)
+        ref.weighted_delta_reduce(d, w)
+        with steady_state_guard():
+            got_pal = ops.weighted_delta_reduce({"x": d}, w)["x"]
+            got_ref = ref.weighted_delta_reduce(d, w)
+        np.testing.assert_allclose(np.asarray(got_pal, np.float64),
+                                   np.asarray(got_ref, np.float64),
+                                   rtol=2.0 ** -8, atol=0)
+
     def test_fp32_inputs_unchanged(self):
         """The fix must not perturb the existing fp32 path."""
         rng = np.random.RandomState(3)

@@ -91,6 +91,17 @@ class TestIdentityTransportSync:
         assert b.uplink_bytes == b.uplink_bytes_raw > 0
         assert b.downlink_bytes == b.downlink_bytes_raw > 0
 
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        """After a warmup run (compile + initial H2D), further rounds must
+        perform no implicit host<->device transfer (DESIGN.md §Static
+        analysis): batches/eval go through the explicit jnp.asarray /
+        device_get wire points only."""
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(_fed(), _sim(2), x, y, xt, yt, parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
+
     def test_downlink_accounting_includes_ctx(self, data):
         """FedADC's broadcast carries θ_t AND m̄_t — the measured downlink
         must be 2× the uplink's raw parameter bytes (the paper's naive
@@ -115,6 +126,15 @@ class TestIdentityTransportAsync:
         a.run(), b.run()
         _assert_trees_equal(a.params, b.params, exact=True)
         assert b.downlink_bytes == b.downlink_bytes_raw > 0
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        s = AsyncFederatedSimulator(_fed(), _sim(2), het, x, y, xt, yt,
+                                    parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
 
     def test_async_downlink_paid_at_dispatch(self, data):
         """Every dispatch (including redispatches) pays one broadcast, so
@@ -152,6 +172,28 @@ class TestIdentityTransportPod:
                 run)(state, batch)
             _assert_trees_equal(sa["params"], sb["params"], exact=True)
 
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        """One warmup step compiles the round; the next step runs entirely
+        on device-resident state + batch with zero implicit transfers."""
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import init_state, make_train_step
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="float32")
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 2, 2, 2, 32))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        fed = FedConfig(strategy="fedadc", clients_per_round=2,
+                        local_steps=2, eta=0.05)
+        with make_host_mesh():
+            state = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+            step = jax.jit(make_train_step(mcfg, fed, run))
+            state, _ = step(state, batch)
+            with steady_state_guard():
+                state, m = step(state, batch)
+            assert np.isfinite(float(jax.device_get(m["loss"])))
+
 
 # ---------------------------------------------------------------------------
 # delta (reference-coded) downlink: the lossless configuration is
@@ -166,6 +208,16 @@ class TestDeltaTransportSync:
                                _sim(), x, y, xt, yt, parts)
         a.run(), b.run()
         _assert_trees_equal(a.params, b.params, exact=True)
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        """The reference-coded downlink keeps its state (ref tree) on
+        device: steady-state rounds stay implicit-transfer-free."""
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(_fed(downlink_compressor="delta"), _sim(2),
+                               x, y, xt, yt, parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
 
     def test_downlink_bytes_steady_state_1x_theta(self, data):
         """FedADC under the Δm̄ codec: round 0 pays the full (θ, m̄) initial
@@ -206,6 +258,15 @@ class TestDeltaTransportAsync:
         a.run(), b.run()
         _assert_trees_equal(a.params, b.params, exact=True)
         assert b.downlink_bytes < b.downlink_bytes_raw
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        s = AsyncFederatedSimulator(_fed(downlink_compressor="delta"),
+                                    _sim(2), het, x, y, xt, yt, parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
 
     def test_downlink_counts_dispatches_not_completions(self, data):
         """Clients whose uploads are dropped still received the broadcast:
@@ -304,6 +365,18 @@ class TestDeltaTransportPod:
                 sa, _ = step_a(sa, batch)
                 sd, _ = step_d(sd, batch)
             _assert_trees_equal(sa["params"], sd["params"], exact=True)
+
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        from repro.launch.train import init_state, make_train_step
+        mesh, mcfg, run, batch, fed = self._setup(
+            downlink_compressor="delta")
+        with mesh:
+            state = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+            step = jax.jit(make_train_step(mcfg, fed, run))
+            state, _ = step(state, batch)
+            with steady_state_guard():
+                state, m = step(state, batch)
+            assert np.isfinite(float(jax.device_get(m["loss"])))
 
     def test_pod_ref_tracks_broadcast(self):
         """After round t the stored reference is the round-t broadcast

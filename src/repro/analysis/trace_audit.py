@@ -230,6 +230,26 @@ def audit_accumulation_dtype() -> List[Finding]:
             findings.append(_finding("trace-accumulation-dtype", path, v,
                                      name))
 
+    # 1b. the sparse scatter-accumulate aggregate on a bf16 wire: the
+    # segment-sum / scatter-add must accumulate ≥fp32 even when the leaf
+    # dtype (the final cast-on-write target) is bf16
+    kk = 8
+    svals = jax.ShapeDtypeStruct((K, kk), jnp.bfloat16)
+    sidx = jax.ShapeDtypeStruct((K, kk), jnp.int32)
+    for name, fn, path in (
+            ("ref.sparse_weighted_delta_reduce",
+             ref.sparse_weighted_delta_reduce,
+             "src/repro/kernels/ref.py"),
+            ("ops.sparse_weighted_delta_reduce",
+             ops.sparse_weighted_delta_reduce,
+             "src/repro/kernels/ops.py")):
+        jaxpr = jax.make_jaxpr(
+            lambda v, i, w, f=fn: f(v, i, w, (D,), jnp.bfloat16))(
+                svals, sidx, weights).jaxpr
+        for v in walk_jaxpr_reductions(jaxpr, name):
+            findings.append(_finding("trace-accumulation-dtype", path, v,
+                                     name))
+
     # 2. the FedADC momentum recursion, in both wire regimes: the momentum
     # leaves must come back ≥fp32 (a bf16 m accumulates Δ̄ across rounds in
     # bf16 — the PR 5 class on the server side) and no reduction inside the
@@ -321,6 +341,8 @@ RETRACE_MATRIX = (
     ("sync", {}),
     ("sync", {"compressor": "topk", "topk_frac": 0.5,
               "error_feedback": True}),
+    ("sync", {"compressor": "topk", "topk_frac": 0.5,
+              "error_feedback": True, "sparse_uplink": True}),
     ("sync", {"downlink_compressor": "delta"}),
     ("async", {}),
     ("async", {"downlink_compressor": "delta", "compressor": "qsgd",

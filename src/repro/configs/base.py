@@ -247,6 +247,14 @@ class FedConfig:
     # dense threshold pass (DESIGN.md §Transport); reconstruction equals
     # the dense path exactly (oracle-tested)
     sparse_uplink: bool = False
+    # sparse-NATIVE server aggregation (kernels/sparse_reduce.py): with the
+    # sparse uplink on, the engines segment-sum the (value, index) wires
+    # straight into the aggregate at K·k cost — per-client dense trees are
+    # never materialised.  False forces the dense-decode path (one scatter
+    # per client, then the dense weighted reduce); the two are the CI
+    # sparse-parity axis.  Ignored unless sparse_uplink selects the
+    # SparseLeaf wire.
+    sparse_aggregate: bool = True
     # downlink broadcast compression (Transport.broadcast): the server
     # compresses (θ_t, ctx) once per round, clients train on the wire
     # reconstruction.  none/identity are bit-exact.  The delta family is

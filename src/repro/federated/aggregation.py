@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tree as T
+from repro.federated.compression import is_sparse_leaf, is_sparse_tree
 
 _EPS = 1e-12
 
@@ -37,6 +38,60 @@ def cosine_divergence(delta, ref):
     num = T.dot(delta, ref)
     den = jnp.sqrt(T.sq_norm(delta) * T.sq_norm(ref) + _EPS)
     return 1.0 - num / jnp.maximum(den, _EPS)
+
+
+# ---------------------------------------------------------------------------
+# sparse-wire primitives: norms / dots / means at K·k cost, never
+# materialising a per-client dense tree (DESIGN.md §Sparse aggregation)
+# ---------------------------------------------------------------------------
+def sparse_sq_norms(wire):
+    """‖Δ_i‖² from the SparseLeaf wire alone: Σ v² in fp32.  (K,) for a
+    client-stacked wire, scalar for a single client's.  Assumes per-client
+    indices are unique within a leaf — top-k wires are by construction (the
+    aggregate kernel itself tolerates duplicates, but a duplicated index
+    denses to v₁+v₂ whose square is not v₁²+v₂²)."""
+    parts = jax.tree.leaves(jax.tree.map(
+        lambda w: jnp.sum(jnp.square(w.values.astype(jnp.float32)), axis=-1),
+        wire, is_leaf=is_sparse_leaf))
+    return sum(parts)
+
+
+def sparse_dot_dense(wire, dense):
+    """⟨Δ_i, ref⟩ against a dense pytree at k-cost: gather ref at the wire
+    indices.  (K,) for a stacked wire, scalar for a single client's."""
+    def leaf(w, d):
+        flat = d.reshape(-1).astype(jnp.float32)
+        return jnp.sum(w.values.astype(jnp.float32) * flat[w.indices],
+                       axis=-1)
+    return sum(jax.tree.leaves(
+        jax.tree.map(leaf, wire, dense, is_leaf=is_sparse_leaf)))
+
+
+def sparse_cosine_divergence(wire, ref):
+    """1 − cos(Δ, ref) with Δ read straight off the sparse wire."""
+    num = sparse_dot_dense(wire, ref)
+    den = jnp.sqrt(sparse_sq_norms(wire)
+                   * T.sq_norm(ref).astype(jnp.float32) + _EPS)
+    return 1.0 - num / jnp.maximum(den, _EPS)
+
+
+def sparse_weighted_mean(wire, weights, like, use_pallas: bool = False):
+    """Σ_i w_i·Δ_i / Σ_i w_i where the stacked deltas are SparseLeaf wires
+    (leading axis K on values/indices): a weighted segment-sum builds each
+    dense output leaf directly at K·k cost.  `like` supplies the dense leaf
+    shapes/dtypes (params or any same-shaped template).  fp32 accumulation,
+    cast to the leaf dtype on write — the same precision contract as
+    `weighted_mean`, parity-pinned in tests/test_kernels.py."""
+    wn = weights.astype(jnp.float32) / jnp.maximum(jnp.sum(weights), _EPS)
+    if use_pallas:
+        from repro.kernels import ops
+        fn = ops.sparse_weighted_delta_reduce
+    else:
+        from repro.kernels import ref as kref
+        fn = kref.sparse_weighted_delta_reduce
+    return jax.tree.map(
+        lambda w, l: fn(w.values, w.indices, wn, l.shape, l.dtype),
+        wire, like, is_leaf=is_sparse_leaf)
 
 
 KNOWN_AGGREGATORS = ("uniform", "examples", "drag")
@@ -65,6 +120,8 @@ def streaming_weight(delta, ref, name: str, lam: float):
         if ref is None:
             raise ValueError("streaming drag weights need a momentum "
                              "reference direction")
+        if is_sparse_tree(delta):
+            return jnp.exp(-lam * sparse_cosine_divergence(delta, ref))
         return jnp.exp(-lam * cosine_divergence(delta, ref))
     return jnp.ones(())
 
@@ -77,9 +134,24 @@ def drag_weights(deltas, ref=None, lam: float = 4.0):
     return jnp.exp(-lam * div)
 
 
+def sparse_drag_weights(deltas, like, ref=None, lam: float = 4.0,
+                        use_pallas: bool = False):
+    """DRAG weights read straight off a stacked SparseLeaf wire.  The
+    ref=None fallback mirrors `drag_weights`: the round mean, built once
+    by the sparse aggregate (uniform weights) instead of densifying K
+    clients.  The per-client divergences are k-cost gathers against it."""
+    if ref is None:
+        K = _leading_dim(deltas)
+        ref = sparse_weighted_mean(deltas, jnp.ones((K,), jnp.float32),
+                                   like, use_pallas=use_pallas)
+    return jnp.exp(-lam * sparse_cosine_divergence(deltas, ref))
+
+
 def compute_weights(name: str, deltas, n_examples=None, ref=None,
-                    lam: float = 4.0):
-    """Unnormalised aggregation weights (K,) for stacked deltas."""
+                    lam: float = 4.0, like=None, use_pallas: bool = False):
+    """Unnormalised aggregation weights (K,) for stacked deltas — dense or
+    SparseLeaf wires (`like` supplies the dense template the sparse drag
+    fallback aggregates into; unused otherwise)."""
     K = _leading_dim(deltas)
     if name == "uniform":
         return jnp.ones((K,), jnp.float32)
@@ -88,6 +160,12 @@ def compute_weights(name: str, deltas, n_examples=None, ref=None,
             raise ValueError("aggregator='examples' needs per-client counts")
         return jnp.asarray(n_examples, jnp.float32)
     if name == "drag":
+        if is_sparse_tree(deltas):
+            if like is None:
+                raise ValueError("sparse drag weights need a dense template "
+                                 "(like=) for the round-mean fallback")
+            return sparse_drag_weights(deltas, like, ref=ref, lam=lam,
+                                       use_pallas=use_pallas)
         return drag_weights(deltas, ref=ref, lam=lam)
     raise ValueError(f"unknown aggregator {name!r}; "
                      f"known: {', '.join(KNOWN_AGGREGATORS)}")

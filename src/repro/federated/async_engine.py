@@ -158,6 +158,7 @@ class AsyncFederatedSimulator(FederatedSimulator):
         protocol = self.protocol
         client_update = self._make_client_update()
         transported = protocol.transport.up is not None
+        sparse_native = protocol.sparse_native
 
         def deltas_fn(params_w, ctx, xb, yb, counts, cstates, efs, keys):
             deltas, _, losses, _ = jax.vmap(
@@ -165,7 +166,15 @@ class AsyncFederatedSimulator(FederatedSimulator):
             )(xb, yb, counts, cstates)
             new_efs = efs
             if transported:
-                deltas, new_efs = jax.vmap(protocol.uplink)(deltas, efs, keys)
+                if sparse_native:
+                    # the in-flight record holds the SparseLeaf wire, not a
+                    # dense reconstruction — K·k floats buffered per client
+                    # instead of d, and the flush aggregates it directly
+                    deltas, new_efs = jax.vmap(protocol.uplink_encode)(
+                        deltas, efs, keys)
+                else:
+                    deltas, new_efs = jax.vmap(protocol.uplink)(deltas, efs,
+                                                                keys)
             return deltas, new_efs, losses
 
         return deltas_fn
@@ -175,18 +184,28 @@ class AsyncFederatedSimulator(FederatedSimulator):
         -> (params', server_state').  `scales` folds the per-delta staleness
         discount and FedNova normalisation into one multiplier."""
         protocol = self.protocol
+        sparse_native = protocol.sparse_native
         # static gating, exactly as in the synchronous round function: the
         # disabled apply_fn is bit-identical to the pre-telemetry one
         with_metrics = self.telemetry.enabled
         has_momentum = A.reference_direction(self.server_state) is not None
 
+        def scale_leaf(d, scales):
+            return d * scales.reshape((-1,) + (1,) * (d.ndim - 1)
+                                      ).astype(d.dtype)
+
         def apply_fn(params, server_state, deltas, n_examples, scales):
-            scaled = jax.tree.map(
-                lambda d: d * scales.reshape((-1,) + (1,) * (d.ndim - 1)
-                                             ).astype(d.dtype), deltas)
+            if sparse_native:
+                # only the values carry magnitude — scaling them is exactly
+                # scaling the dense reconstruction; indices pass through
+                scaled = jax.tree.map(
+                    lambda w: w._replace(values=scale_leaf(w.values, scales)),
+                    deltas, is_leaf=A.is_sparse_leaf)
+            else:
+                scaled = jax.tree.map(lambda d: scale_leaf(d, scales), deltas)
             weights = protocol.weights(scaled, n_examples=n_examples,
-                                       server_state=server_state)
-            mean_delta = protocol.aggregate(scaled, weights)
+                                       server_state=server_state, like=params)
+            mean_delta = protocol.aggregate(scaled, weights, like=params)
             new_params, new_ss = protocol.server_update(server_state, params,
                                                         mean_delta)
             metrics = {}
@@ -341,9 +360,15 @@ class AsyncFederatedSimulator(FederatedSimulator):
                     # mass is conserved (Σ arrived q + e = Σ Δ) even when
                     # the client was re-dispatched meanwhile — addition
                     # commutes with later EF updates
+                    lost = rec.delta
+                    if self.protocol.sparse_native:
+                        # the record holds the sparse wire; the EF store is
+                        # dense, so densify this one delta here — bitwise
+                        # the reconstruction the server would have decoded
+                        lost = self.transport.uplink_decode(lost, self.params)
                     cur = self.ef_states.get(rec.client)
                     self.ef_states[rec.client] = T.add(
-                        self._ef_init() if cur is None else cur, rec.delta)
+                        self._ef_init() if cur is None else cur, lost)
                 self._dispatch(heap, 1, self.vtime)
                 continue
             self.event_log.append(("arrive", self.vtime, rec.client,

@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +57,28 @@ from repro.core import tree as T
 from repro.kernels import ref
 
 KNOWN_COMPRESSORS = ("none", "identity", "topk", "qsgd")
+
+
+class SparseLeaf(NamedTuple):
+    """One leaf's sparse wire format: the k surviving (value, index) pairs.
+    A NamedTuple, so it is a pytree — it vmaps over clients and crosses jit
+    boundaries like any other array pair.  Lives here (not transport) so
+    the aggregation layer can consume the wire without importing the
+    codec machinery; transport re-exports it."""
+    values: jax.Array     # (k,) — or (K, k) once stacked over clients
+    indices: jax.Array    # same shape, int32 flat index into the leaf
+
+
+def is_sparse_leaf(x) -> bool:
+    return isinstance(x, SparseLeaf)
+
+
+def is_sparse_tree(tree) -> bool:
+    """True when the pytree's aggregation-level leaves are SparseLeaf wires
+    (the sparse-native uplink); False for dense trees.  Mixed trees don't
+    occur: SparseTopKCodec encodes every leaf."""
+    return any(is_sparse_leaf(l)
+               for l in jax.tree.leaves(tree, is_leaf=is_sparse_leaf))
 
 
 def _leaf_elems(leaf) -> int:

@@ -98,16 +98,45 @@ class RoundProtocol:
         """Step 3: one client's wire round trip (vmap over clients)."""
         return self.transport.uplink(delta, ef, key)
 
-    def weights(self, deltas, n_examples=None, server_state=None):
+    def uplink_encode(self, delta, ef, key):
+        """Step 3, sparse-native form: encode only — the wire (SparseLeaf
+        pairs) flows straight into the sparse aggregate, never decoded to a
+        per-client dense tree.  The EF residual is the same exact
+        complement `uplink` would return (encode computes it; decode never
+        touches it), so switching paths cannot drift the EF contract."""
+        return self.transport.uplink_encode(delta, ef, key)
+
+    def uplink_decode(self, wire, like):
+        return self.transport.uplink_decode(wire, like)
+
+    @property
+    def sparse_native(self) -> bool:
+        """True when the engines should keep the uplink wire sparse into
+        the aggregate (Transport.sparse_native)."""
+        return self.transport.sparse_native
+
+    def weights(self, deltas, n_examples=None, server_state=None, like=None):
         """Step 4a: aggregation weights from the pluggable aggregator; the
-        DRAG reference is the server momentum when the strategy keeps one."""
+        DRAG reference is the server momentum when the strategy keeps one.
+        `like` is the dense template sparse-wire DRAG aggregates its
+        round-mean fallback into (ignored for dense deltas)."""
         ref = A.reference_direction(server_state)
         return A.compute_weights(self.fed.aggregator, deltas,
                                  n_examples=n_examples, ref=ref,
-                                 lam=self.fed.drag_lambda)
+                                 lam=self.fed.drag_lambda, like=like,
+                                 use_pallas=self.fed.use_pallas)
 
-    def aggregate(self, deltas, weights):
-        """Step 4b: Δ̄ through the strategy's shared reduction."""
+    def aggregate(self, deltas, weights, like=None):
+        """Step 4b: Δ̄ through the strategy's shared reduction.  A stacked
+        SparseLeaf wire takes the sparse-native segment-sum (K·k cost,
+        `like` required for the dense output template); stateful-correction
+        strategies never reach it (they reject lossy uplinks above)."""
+        if A.is_sparse_tree(deltas):
+            if like is None:
+                raise ValueError("sparse-native aggregation needs a dense "
+                                 "template (like=)")
+            return A.sparse_weighted_mean(deltas, weights, like,
+                                          use_pallas=self.fed.use_pallas)
         return self.strategy.server_aggregate(deltas, weights, self.fed)
 
     def server_update(self, server_state, params, mean_delta):

@@ -263,6 +263,7 @@ class FederatedSimulator:
         protocol = self.protocol
         client_update = self._make_client_update()
         transported = protocol.transport.up is not None
+        sparse_native = protocol.sparse_native
         down = protocol.transport.down
         lossy_down = down is not None and down.lossy
         # drift diagnostics are gated on STATIC facts only (telemetry flag,
@@ -288,12 +289,23 @@ class FederatedSimulator:
                 # the decoded reconstructions below, so the momentum
                 # recursion in server_update composes with the lossy wire
                 keys = jax.random.split(key, xb.shape[0])
-                deltas, new_efs = jax.vmap(protocol.uplink)(deltas, efs, keys)
+                if sparse_native:
+                    # encode only: the (values, indices) wire flows straight
+                    # into the segment-sum aggregate — no per-client dense
+                    # reconstruction exists in the round.  encode returns
+                    # the same exact-complement EF residual the roundtrip
+                    # would (decode never touches it), so the EF contract
+                    # is path-independent.
+                    deltas, new_efs = jax.vmap(protocol.uplink_encode)(
+                        deltas, efs, keys)
+                else:
+                    deltas, new_efs = jax.vmap(protocol.uplink)(deltas, efs,
+                                                                keys)
             else:
                 new_efs = efs
             weights = protocol.weights(deltas, n_examples=n_examples,
-                                       server_state=server_state)
-            mean_delta = protocol.aggregate(deltas, weights)
+                                       server_state=server_state, like=params)
+            mean_delta = protocol.aggregate(deltas, weights, like=params)
             if fed.strategy == "feddyn":
                 mean_theta_H = jax.tree.map(lambda d: jnp.mean(d, 0), theta_Hs)
                 sum_drift = jax.tree.map(

@@ -48,25 +48,19 @@ stateless instance.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tree as T
 from repro.federated import compression as C
+# the wire format itself lives with the compressor arithmetic so the
+# aggregation layer can consume it codec-free; re-exported here because
+# transport is the wire's public face
+from repro.federated.compression import SparseLeaf, is_sparse_leaf
 
-
-class SparseLeaf(NamedTuple):
-    """One leaf's sparse wire format: the k surviving (value, index) pairs.
-    A NamedTuple, so it is a pytree — it vmaps over clients and crosses jit
-    boundaries like any other array pair."""
-    values: jax.Array     # (k,)
-    indices: jax.Array    # (k,) int32, flat index into the leaf
-
-
-def _is_sparse(x) -> bool:
-    return isinstance(x, SparseLeaf)
+_is_sparse = is_sparse_leaf
 
 
 # ---------------------------------------------------------------------------
@@ -347,6 +341,17 @@ class Transport:
     @property
     def downlink_bytes_raw(self):
         return self.counters.get("transport.downlink_bytes_raw")
+
+    @property
+    def sparse_native(self) -> bool:
+        """True when the uplink wire is SparseLeaf pairs AND the config
+        asks the server to aggregate them natively
+        (``FedConfig.sparse_aggregate``): engines keep the wire sparse all
+        the way into the segment-sum aggregate instead of decoding each
+        client to dense first.  False falls back to the dense-decode path
+        (the CI parity axis)."""
+        return (isinstance(self.up, SparseTopKCodec)
+                and self.fed.sparse_aggregate)
 
     @property
     def needs_downlink_ref(self) -> bool:

@@ -16,6 +16,7 @@ from repro.kernels import compress as _cp
 from repro.kernels import fedadc_update as _fu
 from repro.kernels import flash_attention as _fa
 from repro.kernels import kd_loss as _kd
+from repro.kernels import sparse_reduce as _sr
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import weighted_reduce as _wr
 
@@ -148,6 +149,35 @@ def sparse_scatter_leaf(values, indices, shape, dtype):
     dense threshold pass."""
     n = int(np.prod(shape)) if shape else 1
     return jnp.zeros((n,), dtype).at[indices].set(values).reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def sparse_weighted_delta_reduce(values, indices, weights, shape, dtype):
+    """Σ_k w_k · scatter(values_k @ indices_k) for one leaf: the sparse
+    server aggregate at K·k cost instead of K·d (kernels/sparse_reduce.py).
+    `values`/`indices` are the stacked (K, k) wire pairs of K clients
+    (duplicate indices accumulate), `shape`/`dtype` the dense leaf
+    template.  Accumulation is fp32 inside the kernel's revisited output
+    ref; the single cast to `dtype` happens on the final write
+    (cast-on-write precision contract)."""
+    _, k = values.shape
+    n = 1
+    for dim in shape:      # static python ints — no host sync in the trace
+        n *= dim
+    if k == 0:
+        # an empty wire contributes nothing — and a zero-width Pallas
+        # block is not a thing, so short-circuit before the kernel
+        return jnp.zeros(shape, dtype)
+    kpad = (-k) % LANE
+    if kpad:
+        # (value 0, index 0) filler pairs: the weighted zeros land on
+        # index 0 as exact +0.0 adds, which never perturb the sum
+        values = jnp.pad(values, ((0, 0), (0, kpad)))
+        indices = jnp.pad(indices, ((0, 0), (0, kpad)))
+    rows = (n + LANE - 1) // LANE
+    out = _sr.sparse_reduce_2d(values, indices.astype(jnp.int32), weights,
+                               rows, interpret=_interpret())
+    return out.reshape(-1)[:n].astype(dtype).reshape(shape)
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,8 @@ kernel (interpret=True on CPU) against these references across shape/dtype
 sweeps."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -34,6 +36,24 @@ def weighted_delta_reduce(deltas, weights):
     out = jnp.tensordot(weights.astype(acc_t), deltas.astype(acc_t),
                         axes=([0], [0]))
     return out.astype(deltas.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def sparse_weighted_delta_reduce(values, indices, weights, shape, dtype):
+    """Σ_k w_k · scatter(values_k @ indices_k) for one leaf without ever
+    materialising the K dense reconstructions: a weighted segment-sum over
+    the stacked (K, k) wire pairs into the dense `shape` template.
+    Accumulates in at least fp32 (same contract as weighted_delta_reduce),
+    cast to the leaf dtype on the final write.  Duplicate indices within a
+    client accumulate (scatter-add semantics)."""
+    n = 1
+    for d in shape:        # static python ints — no host sync in the trace
+        n *= d
+    acc_t = jnp.promote_types(values.dtype, jnp.float32)
+    wv = (weights.astype(acc_t)[:, None] * values.astype(acc_t)).reshape(-1)
+    out = jax.ops.segment_sum(wv, indices.reshape(-1).astype(jnp.int32),
+                              num_segments=n)
+    return out.astype(dtype).reshape(shape)
 
 
 # ---------------------------------------------------------------------------

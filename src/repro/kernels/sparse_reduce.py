@@ -1,0 +1,72 @@
+"""Pallas scatter-accumulate kernel: the sparse server aggregate.
+
+The sparse top-k uplink (transport.SparseTopKCodec) ships each client's
+delta as per-leaf ``(values, indices)`` pairs, but until this kernel the
+server decoded every client to dense before ``weighted_delta_reduce`` —
+aggregation FLOPs and memory traffic scaled with the parameter count d
+even at ``topk_frac = 0.01``.  This kernel segment-sums the K stacked
+wire pairs straight into one dense output leaf:
+
+    out[idx_{k,j}] += w_k · values_{k,j}      (K · k adds, not K · d)
+
+Tiling: one grid step per client; the output block (the whole padded
+leaf, lane-aligned) is *revisited* across the K steps — a constant
+output index map keeps the running sum resident, and the fp32 output ref
+IS the accumulator, so accumulation is fp32 whatever the wire dtype
+(PR 5's cast-on-write precision contract; the ops.py wrapper casts to
+the wire dtype exactly once, on the final write).  Duplicate indices
+within a client accumulate (scatter-add), matching the segment-sum
+oracle in kernels/ref.py bit for bit: both apply the weighted updates in
+client-major order onto an fp32 zero buffer.
+
+VMEM note: the output block is the full padded leaf, so a single-leaf
+aggregate is VMEM-bounded at ~leaf_bytes (fp32) + K·k pairs.  That holds
+comfortably for per-leaf aggregation of the assigned architectures; a
+future hierarchical (regional) aggregator reusing this kernel at larger
+fan-in would tile the output over row blocks and mask each client's
+pairs per block — the k-cost hook the ROADMAP's million-client item
+builds on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _sparse_reduce_kernel(w_ref, v_ref, i_ref, o_ref):
+    # w (1, LANE) fp32 — one client's weight, broadcast along lanes for
+    # lane alignment; v/i (1, kp); o (rows, LANE) fp32, revisited across
+    # the K grid steps (constant index map): the ref is the accumulator.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wv = w_ref[0, 0] * v_ref[...].reshape(-1).astype(jnp.float32)
+    flat = o_ref[...].reshape(-1)
+    flat = flat.at[i_ref[...].reshape(-1)].add(wv)
+    o_ref[...] = flat.reshape(o_ref.shape)
+
+
+def sparse_reduce_2d(values, indices, weights, rows, interpret=False):
+    """values (K, kp), indices (K, kp) int32 into the flattened (rows·LANE,)
+    output, weights (K,) -> (rows, LANE) fp32 = Σ_k w_k · scatter(v_k @ i_k).
+
+    kp and rows·LANE are lane-aligned by the ops.py wrapper (k-padding uses
+    (value 0, index 0) pairs — weighted zeros accumulate as exact +0.0).
+    The caller casts the fp32 result to the wire dtype (cast-on-write)."""
+    k_clients, kp = values.shape
+    w2d = jnp.broadcast_to(weights.astype(jnp.float32)[:, None],
+                           (k_clients, LANE))
+    return pl.pallas_call(
+        _sparse_reduce_kernel,
+        grid=(k_clients,),
+        in_specs=[pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+                  pl.BlockSpec((1, kp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, kp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, LANE), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(w2d, values, indices)

@@ -165,6 +165,7 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             "scan has no round mean to fall back on.")
     transport = Transport(fed)
     transported = transport.up is not None
+    sparse_native = transport.sparse_native
     ef_enabled = transport.ef_enabled
     lossy_down = transport.down is not None and transport.down.lossy
     model = get_model(mcfg)
@@ -219,8 +220,14 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             d, l = client_delta(theta_t, ctx, cb)
             new_ef = ef if efs is not None else jnp.zeros(())
             if transported:
-                d, new_ef = transport.uplink(
-                    d, T.zeros_like(d) if ef is None else ef, ck)
+                # sparse-native: encode only — the (values, indices) wire
+                # is scatter-accumulated below at k-cost, and the EF
+                # residual from encode is the exact complement the
+                # roundtrip would return (the scan carry stays
+                # dense-output/sparse-input)
+                up = transport.uplink_encode if sparse_native \
+                    else transport.uplink
+                d, new_ef = up(d, T.zeros_like(d) if ef is None else ef, ck)
                 if efs is None:
                     new_ef = jnp.zeros(())   # residual not carried
             w = A.streaming_weight(d, ref, fed.aggregator, fed.drag_lambda)
@@ -228,8 +235,17 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             # bf16 running sum loses the late clients to rounding once the
             # partial sum's ulp outgrows the increments; cast on write
             # happens after the cross-pod aggregation below
-            acc = jax.tree.map(
-                lambda a, di: a + w * di.astype(jnp.float32), acc, d)
+            if sparse_native:
+                # per coordinate this is the same client-ordered fp32 add
+                # chain as the dense decode path (whose off-support adds
+                # are exact +0.0 no-ops), so the two are bit-identical
+                acc = jax.tree.map(
+                    lambda wl, a: a.reshape(-1).at[wl.indices].add(
+                        w * wl.values.astype(jnp.float32)).reshape(a.shape),
+                    d, acc, is_leaf=A.is_sparse_leaf)
+            else:
+                acc = jax.tree.map(
+                    lambda a, di: a + w * di.astype(jnp.float32), acc, d)
             if with_metrics:
                 # the only telemetry cost in the scan: one fp32 scalar,
                 # Σ w·||Δ||², for the streaming-dispersion identity
@@ -351,4 +367,28 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             aux["telemetry"] = metrics
         return new_state, aux
 
+    # measured-byte accounting (bugfix): the pod engine drives real wire
+    # traffic through `transport` but used to leave the byte counters at
+    # zero — the only tree a consumer could size was the dense master-dtype
+    # reconstruction the decode side materialises (fp32 under the mixed
+    # round: ~2× the actual bf16 sparse wire).  Templates come from
+    # eval_shape (no allocation) on the WIRE trees: the uplink delta and
+    # the broadcast both live in the wire dtype (_wire_dtype).
+    state_t = state_shapes(mcfg, fed, run)
+    theta_w_t, _, ctx_t = jax.eval_shape(
+        lambda p, s: _broadcast_inputs(strategy, p, s, fed, run)[:3],
+        state_t["params"], state_t["server"])
+    transport.set_wire_templates(theta_w_t, (theta_w_t, ctx_t))
+
+    def account_round(n_clients: int, resync: bool = False):
+        """Advance the measured-byte counters by one round's traffic for
+        `n_clients` dispatched clients.  Host-side by design: callers jit
+        train_step themselves, so the counters cannot advance inside it —
+        call once per executed round (resync=True for the delta downlink's
+        round-0 initial sync)."""
+        transport.account_downlink(n_clients, resync=resync)
+        transport.account_uplink(n_clients)
+
+    train_step.transport = transport
+    train_step.account_round = account_round
     return train_step

@@ -37,11 +37,34 @@ from repro.core import tree as T
 EPS = 1e-12
 
 
+def _is_sparse_stack(deltas) -> bool:
+    # lazy: telemetry must stay importable without the federated package
+    from repro.federated.compression import is_sparse_tree
+    return is_sparse_tree(deltas)
+
+
 def delta_dispersion(deltas, mean_delta):
     """``mean_i ||Δ_i − Δ̄||² / ||Δ̄||²`` over a stacked (leading-axis
-    clients) delta pytree."""
+    clients) delta pytree — dense arrays or SparseLeaf wires (the
+    sparse-native aggregate's input; dispatched at trace time)."""
+    if _is_sparse_stack(deltas):
+        return sparse_delta_dispersion(deltas, mean_delta)
     nbar = T.sq_norm(mean_delta)
     per = jax.vmap(lambda d: T.sq_norm(T.sub(d, mean_delta)))(deltas)
+    return (jnp.mean(per) / (nbar + EPS)).astype(jnp.float32)
+
+
+def sparse_delta_dispersion(wire, mean_delta):
+    """Dispersion from the stacked SparseLeaf wire without densifying any
+    client: ``||Δ_i − Δ̄||² = ||Δ_i||² − 2⟨Δ_i, Δ̄⟩ + ||Δ̄||²`` where the
+    norm is Σv² off the wire and the dot is a k-cost gather against the
+    (already dense) round aggregate.  Clamped at 0 — the identity can go
+    epsilon-negative in fp32 where the vmapped dense form cannot."""
+    from repro.federated import aggregation as A
+    nbar = T.sq_norm(mean_delta).astype(jnp.float32)
+    per = (A.sparse_sq_norms(wire)
+           - 2.0 * A.sparse_dot_dense(wire, mean_delta) + nbar)
+    per = jnp.maximum(per, 0.0)
     return (jnp.mean(per) / (nbar + EPS)).astype(jnp.float32)
 
 
@@ -83,7 +106,12 @@ def round_metrics(deltas, mean_delta, momentum=None, efs=None):
 # scalar second moment instead of materialising the per-client deltas
 # ---------------------------------------------------------------------------
 def streaming_sq_norm(delta, weight):
-    """One scan step's contribution to ``Σ w_i·||Δ_i||²`` (f32)."""
+    """One scan step's contribution to ``Σ w_i·||Δ_i||²`` (f32); reads the
+    norm straight off a SparseLeaf wire when the pod engine streams the
+    sparse-native uplink."""
+    if _is_sparse_stack(delta):
+        from repro.federated import aggregation as A
+        return weight * A.sparse_sq_norms(delta)
     return weight * T.sq_norm(delta)
 
 

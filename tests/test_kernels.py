@@ -324,3 +324,113 @@ class TestWeightedReduceFp32Accumulation:
         np.testing.assert_allclose(
             np.asarray(got), np.asarray(ref.weighted_delta_reduce(d, w)),
             rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sparse_weighted_delta_reduce: the scatter-accumulate server aggregate
+# (kernels/sparse_reduce.py) vs the jnp segment-sum oracle and an fp64
+# dense oracle — the sparse-native path's precision and collision contracts.
+# ---------------------------------------------------------------------------
+class TestSparseReduce:
+    K, N = 96, 4096
+    TOPK = 409               # ceil(0.1 · N)
+
+    def _wire(self, dtype=jnp.bfloat16, k=None, n=None, K=None, seed=7):
+        k = self.TOPK if k is None else k
+        n = self.N if n is None else n
+        K = self.K if K is None else K
+        rng = np.random.RandomState(seed)
+        # positive ~1.0 values: the adversarial regime for low-precision
+        # accumulation (partial sums grow monotonically)
+        vals = jnp.asarray(1.0 + 0.05 * rng.randn(K, k), dtype)
+        # unique-per-client indices, as the top-k wire guarantees
+        idx = jnp.asarray(
+            np.stack([rng.choice(n, size=k, replace=False)
+                      for _ in range(K)]), jnp.int32)
+        w = jnp.asarray(rng.uniform(0.2, 1.0, K), jnp.float32)
+        return vals, idx, w
+
+    @pytest.mark.parametrize("shape,dtype,K,k", [
+        ((64, 32), jnp.float32, 6, 97),
+        ((4096,), jnp.bfloat16, 96, 409),
+        ((17,), jnp.float32, 3, 5),        # k-pad + n-pad, tiny leaf
+        ((), jnp.float32, 4, 1),           # scalar leaf
+    ])
+    def test_pallas_matches_ref_bitwise(self, shape, dtype, K, k):
+        """Kernel and oracle apply the weighted updates in the same
+        client-major order onto an fp32 zero buffer — bitwise equal."""
+        n = int(np.prod(shape)) if shape else 1
+        rng = np.random.RandomState(K * 1000 + k)
+        vals = jnp.asarray(rng.randn(K, k), dtype)
+        idx = jnp.asarray(rng.randint(0, n, (K, k)), jnp.int32)
+        w = jnp.asarray(rng.uniform(0.2, 1.0, K), jnp.float32)
+        got = ops.sparse_weighted_delta_reduce(vals, idx, w, shape, dtype)
+        exp = ref.sparse_weighted_delta_reduce(vals, idx, w, shape, dtype)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+    def test_bf16_values_fp32_accumulate_vs_fp64_oracle(self):
+        """K=96 bf16 wires: fp32 accumulation keeps the aggregate within
+        one bf16 ulp of the fp64 dense oracle (an in-dtype running sum
+        would drown the late clients, as the dense reduce class pins)."""
+        vals, idx, w = self._wire()
+        oracle = np.zeros(self.N)
+        wv = np.asarray(w, np.float64)[:, None] * np.asarray(vals, np.float64)
+        np.add.at(oracle, np.asarray(idx).reshape(-1), wv.reshape(-1))
+        bound = np.abs(oracle) * 2.0 ** -8 + 1e-7
+        for fn in (ops.sparse_weighted_delta_reduce,
+                   ref.sparse_weighted_delta_reduce):
+            got = np.asarray(fn(vals, idx, w, (self.N,), jnp.float32),
+                             np.float64)
+            assert np.all(np.abs(got - oracle) <= bound), fn.__module__
+
+    def test_duplicate_index_collisions_accumulate(self):
+        """Duplicated indices within a client must scatter-ADD (the
+        segment-sum semantics), not last-write-wins like decode's .set."""
+        vals = jnp.asarray([[1.0, 2.0, 4.0], [8.0, 16.0, 32.0]], jnp.float32)
+        idx = jnp.asarray([[5, 5, 5], [5, 5, 2]], jnp.int32)
+        w = jnp.asarray([1.0, 1.0], jnp.float32)
+        for fn in (ops.sparse_weighted_delta_reduce,
+                   ref.sparse_weighted_delta_reduce):
+            got = np.asarray(fn(vals, idx, w, (8,), jnp.float32))
+            # weights applied as given (normalisation happens upstream)
+            assert got[5] == 1 + 2 + 4 + 8 + 16, fn.__module__
+            assert got[2] == 32.0, fn.__module__
+            assert got[[0, 1, 3, 4, 6, 7]].sum() == 0.0
+
+    def test_empty_k_edge(self):
+        """A zero-width wire contributes exactly zeros (no Pallas call —
+        a zero-size block cannot be tiled)."""
+        w = jnp.ones((2,), jnp.float32)
+        for fn in (ops.sparse_weighted_delta_reduce,
+                   ref.sparse_weighted_delta_reduce):
+            out = fn(jnp.zeros((2, 0)), jnp.zeros((2, 0), jnp.int32), w,
+                     (8,), jnp.float32)
+            np.testing.assert_array_equal(np.asarray(out), 0.0)
+            assert out.shape == (8,) and out.dtype == jnp.float32
+
+    def test_matches_dense_decode_fold(self):
+        """The end-to-end contract: segment-summing the wire equals
+        decoding each client dense and folding in client order (the
+        off-support adds are exact +0.0 no-ops) — bitwise."""
+        vals, idx, w = self._wire(dtype=jnp.float32, seed=11)
+        acc = np.zeros(self.N, np.float32)
+        for i in range(self.K):
+            dense = np.asarray(ops.sparse_scatter_leaf(
+                vals[i], idx[i], (self.N,), jnp.float32))
+            acc = acc + np.float32(w[i]) * dense
+        got = ops.sparse_weighted_delta_reduce(vals, idx, w, (self.N,),
+                                               jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), acc)
+
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        """After one warmup call, both backends aggregate device-resident
+        wires with zero implicit host<->device transfers, and agree."""
+        vals, idx, w = self._wire()
+        args = (vals, idx, w, (self.N,), jnp.float32)
+        ops.sparse_weighted_delta_reduce(*args)
+        ref.sparse_weighted_delta_reduce(*args)
+        with steady_state_guard():
+            got_pal = ops.sparse_weighted_delta_reduce(*args)
+            got_ref = ref.sparse_weighted_delta_reduce(*args)
+        np.testing.assert_array_equal(np.asarray(got_pal),
+                                      np.asarray(got_ref))

@@ -749,6 +749,196 @@ class TestSparseTopK:
 
 
 # ---------------------------------------------------------------------------
+# sparse-native aggregation: segment-summing the wire == decoding every
+# client dense and folding — the CI engine-parity matrix's third codec
+# axis, sparse_aggregate ∈ {dense-decode, sparse-native}, per engine
+# ---------------------------------------------------------------------------
+def _sparse_fed(**kw):
+    base = dict(compressor="topk", topk_frac=0.1, sparse_uplink=True)
+    base.update(kw)
+    return _fed(**base)
+
+
+class TestSparseAggTransportSync:
+    def test_unit_aggregate_matches_dense_fold(self):
+        """sparse_weighted_mean (both backends) is bitwise the sequential
+        dense fold: decode each client, accumulate wn_i·Δ_i client-major
+        into fp32 zeros, cast on the final write."""
+        from repro.federated import aggregation as A
+        from repro.kernels import ops
+        like = _tree(0)
+        codec = SparseTopKCodec(0.1)
+        wires = [codec.encode(_tree(s), T.zeros_like(like),
+                              jax.random.PRNGKey(s))[0]
+                 for s in (1, 2, 3)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *wires)
+        w = jnp.asarray([0.5, 0.2, 0.3], jnp.float32)
+        wn = np.asarray(w / jnp.maximum(jnp.sum(w), 1e-12), np.float32)
+        oracle = {}
+        for key, leaf in like.items():
+            acc = np.zeros(leaf.shape, np.float32)
+            for i, wire in enumerate(wires):
+                dense = np.asarray(ops.sparse_scatter_leaf(
+                    wire[key].values, wire[key].indices,
+                    leaf.shape, leaf.dtype))
+                acc = acc + wn[i] * dense
+            oracle[key] = acc.astype(leaf.dtype)
+        for use_pallas in (False, True):
+            got = A.sparse_weighted_mean(stacked, w, like,
+                                         use_pallas=use_pallas)
+            _assert_trees_equal(got, oracle, exact=True)
+
+    def test_simulator_trajectory_matches_dense_decode(self, data):
+        """End-to-end engine parity: sparse-native aggregation reproduces
+        the dense-decode trajectory (1e-6: same fp32 sums, different add
+        order) at identical measured wire bytes."""
+        x, y, xt, yt, parts = data
+        a = FederatedSimulator(_sparse_fed(sparse_aggregate=False), _sim(),
+                               x, y, xt, yt, parts)
+        b = FederatedSimulator(_sparse_fed(sparse_aggregate=True), _sim(),
+                               x, y, xt, yt, parts)
+        a.run(), b.run()
+        assert b.transport.sparse_native and not a.transport.sparse_native
+        _assert_trees_equal(a.params, b.params, exact=False, atol=1e-6)
+        assert b.uplink_bytes == a.uplink_bytes < a.uplink_bytes_raw
+
+    def test_drag_weights_from_wire(self, data):
+        """The DRAG aggregator runs off the wire too (sparse divergence
+        against the broadcast reference) and stays close to dense-decode."""
+        x, y, xt, yt, parts = data
+        kw = dict(aggregator="drag")
+        a = FederatedSimulator(_sparse_fed(sparse_aggregate=False, **kw),
+                               _sim(), x, y, xt, yt, parts)
+        b = FederatedSimulator(_sparse_fed(sparse_aggregate=True, **kw),
+                               _sim(), x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=False, atol=1e-5)
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(_sparse_fed(), _sim(2), x, y, xt, yt, parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
+
+
+class TestSparseAggTransportAsync:
+    def test_async_trajectory_matches_dense_decode(self, data):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        a = AsyncFederatedSimulator(_sparse_fed(sparse_aggregate=False),
+                                    _sim(), het, x, y, xt, yt, parts)
+        b = AsyncFederatedSimulator(_sparse_fed(sparse_aggregate=True),
+                                    _sim(), het, x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=False, atol=1e-6)
+        assert b.uplink_bytes == a.uplink_bytes < a.uplink_bytes_raw
+
+    def test_drop_path_decodes_wire_for_ef(self, data):
+        """Dropped clients fold their lost update back into EF; on the
+        sparse-native path the in-flight record holds the WIRE, so the
+        fold-back decodes it first.  The host-RNG drop schedule is seeded
+        identically in both configs, so parity must survive drops."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, drop_prob=0.3, seed=5)
+        a = AsyncFederatedSimulator(_sparse_fed(sparse_aggregate=False),
+                                    _sim(), het, x, y, xt, yt, parts)
+        b = AsyncFederatedSimulator(_sparse_fed(sparse_aggregate=True),
+                                    _sim(), het, x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=False, atol=1e-6)
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        s = AsyncFederatedSimulator(_sparse_fed(), _sim(2), het, x, y, xt,
+                                    yt, parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
+
+
+class TestSparseAggTransportPod:
+    def _setup(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import init_state, make_train_step
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="float32")
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 2, 2, 2, 32))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        return make_host_mesh(), mcfg, run, batch, init_state, make_train_step
+
+    def test_pod_bit_exact(self):
+        """The pod scan folds clients sequentially either way, and the
+        sparse scatter-adds touch exactly the wire support (off-support
+        adds are +0.0 no-ops) — so sparse-native is BITWISE equal to
+        dense-decode here, not merely close."""
+        kw = dict(strategy="fedadc", clients_per_round=2, local_steps=2,
+                  eta=0.05, compressor="topk", topk_frac=0.1,
+                  error_feedback=True, sparse_uplink=True)
+        mesh, mcfg, run, batch, init_state, make_train_step = self._setup()
+        with mesh:
+            fed_a = FedConfig(sparse_aggregate=False, **kw)
+            fed_b = FedConfig(sparse_aggregate=True, **kw)
+            state = init_state(jax.random.PRNGKey(0), mcfg, fed_a, run)
+            sa, ma = make_train_step(mcfg, fed_a, run)(state, batch)
+            sb, mb = make_train_step(mcfg, fed_b, run)(state, batch)
+            _assert_trees_equal(sa["params"], sb["params"], exact=True)
+            _assert_trees_equal(sa["clients"]["ef"], sb["clients"]["ef"],
+                                exact=True)
+            assert np.isfinite(float(mb["loss"]))
+
+    def test_pod_sparse_uplink_accounts_wire_bytes(self):
+        """Regression (measured-byte audit): the pod engine's uplink
+        counter must report the (values, indices) WIRE bytes at the wire
+        dtype — not the decoded dense reconstruction, and not the fp32
+        master-param bytes."""
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import make_train_step, state_shapes
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="bfloat16")
+        fed = FedConfig(strategy="fedadc", clients_per_round=2,
+                        local_steps=2, eta=0.05, compressor="topk",
+                        topk_frac=0.1, error_feedback=True,
+                        sparse_uplink=True)
+        with make_host_mesh():
+            step = make_train_step(mcfg, fed, run)
+            tr = step.transport
+            step.account_round(4)
+        params_t = state_shapes(mcfg, fed, run)["params"]
+        wire_t = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.bfloat16), params_t)
+        assert tr.uplink_bytes == 4 * tr.uplink_wire_nbytes(wire_t)
+        assert tr.uplink_bytes_raw == 4 * C.raw_nbytes(wire_t)
+        # wire < dense bf16 < dense fp32 master: neither inflation bug
+        assert tr.uplink_bytes < tr.uplink_bytes_raw \
+            < 4 * C.raw_nbytes(params_t)
+        # the round also paid its broadcast; identity downlink ⇒ wire == raw
+        assert tr.downlink_bytes == tr.downlink_bytes_raw > 0
+
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        """The sparse-native pod round — encode on the wire, streaming
+        scatter-add aggregate — runs steady-state with zero implicit
+        host<->device transfers."""
+        fed = FedConfig(strategy="fedadc", clients_per_round=2,
+                        local_steps=2, eta=0.05, compressor="topk",
+                        topk_frac=0.1, error_feedback=True,
+                        sparse_uplink=True)
+        mesh, mcfg, run, batch, init_state, make_train_step = self._setup()
+        with mesh:
+            state = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+            step = jax.jit(make_train_step(mcfg, fed, run))
+            state, _ = step(state, batch)
+            with steady_state_guard():
+                state, m = step(state, batch)
+            assert np.isfinite(float(jax.device_get(m["loss"])))
+
+
+# ---------------------------------------------------------------------------
 # pod engine: top-k + EF through the sharded store
 # ---------------------------------------------------------------------------
 class TestPodErrorFeedback:

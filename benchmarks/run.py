@@ -25,6 +25,11 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   telemetry_bench    — telemetry-enabled vs disabled sync rounds: the
                        DESIGN.md §Telemetry ≤5% overhead contract,
                        measured (emits BENCH_telemetry.json)
+  fleet_bench        — flat vs two-tier hierarchical aggregation at
+                       K ∈ {1e3,1e4,1e5} simulated clients: rounds/s +
+                       peak host bytes with a paged, budget-bounded
+                       client store (DESIGN.md §Fleet; emits
+                       BENCH_fleet.json)
 """
 import argparse
 import time
@@ -38,9 +43,9 @@ def main() -> None:
 
     from benchmarks import (ablation_beta, clustering, comm_load, comm_sweep,
                             fig1_acceleration, fig2_robustness, fig5_scale,
-                            fig7_personalization, kernels_bench, lm_round,
-                            roofline_report, serving_bench, straggler_bench,
-                            table1_sota, telemetry_bench)
+                            fig7_personalization, fleet_bench, kernels_bench,
+                            lm_round, roofline_report, serving_bench,
+                            straggler_bench, table1_sota, telemetry_bench)
     mods = {
         "kernels_bench": kernels_bench,
         "comm_load": comm_load,
@@ -57,6 +62,7 @@ def main() -> None:
         "straggler_bench": straggler_bench,
         "serving_bench": serving_bench,
         "telemetry_bench": telemetry_bench,
+        "fleet_bench": fleet_bench,
     }
     picked = (args.only.split(",") if args.only else list(mods))
     print("name,us_per_call,derived")

@@ -528,10 +528,23 @@ def check_timer_barrier(tree: ast.Module, path: str, src_lines: List[str],
 # --------------------------------------------------------------------------
 
 def _is_growable_literal(node: ast.AST) -> bool:
-    if isinstance(node, (ast.List, ast.Dict)):
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
         return True
-    if isinstance(node, ast.Call) and _dotted(node.func) in ("list", "dict"):
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func)
+    if name in ("list", "dict", "set", "OrderedDict",
+                "collections.OrderedDict", "defaultdict",
+                "collections.defaultdict"):
         return True
+    if name in ("deque", "collections.deque"):
+        # deque(maxlen=N) (or the two-positional form) is the bounded
+        # structure this rule asks for — only an unbounded deque grows.
+        # Fleet-package eviction/spill bookkeeping must be one of: a
+        # maxlen deque, or page-table-bounded (popped on eviction/load).
+        bounded = any(kw.arg == "maxlen" for kw in node.keywords) \
+            or len(node.args) >= 2
+        return not bounded
     return False
 
 
@@ -570,9 +583,11 @@ def check_unbounded_accumulator(tree: ast.Module, path: str,
                         and isinstance(obj.value, ast.Name) \
                         and obj.value.id == "self":
                     if n.func.attr in ("append", "extend", "insert",
-                                       "setdefault", "update"):
+                                       "setdefault", "update", "add",
+                                       "appendleft"):
                         appends.setdefault(obj.attr, n)
-                    elif n.func.attr in ("clear", "pop", "popleft"):
+                    elif n.func.attr in ("clear", "pop", "popleft",
+                                         "popitem", "discard", "remove"):
                         clears.add(obj.attr)
 
         for attr, site in appends.items():

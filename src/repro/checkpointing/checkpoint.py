@@ -16,22 +16,44 @@ import numpy as np
 
 _SEP = "|"
 
+# ml_dtypes (bf16, fp8, ...) don't round-trip through npz or frombuffer —
+# some versions expose them as kind "V", newer ones as kind "f", and either
+# way np.load chokes on the descriptor.  Storage keeps the raw bits as the
+# same-width uint; readers view them back as the target dtype.  Shared with
+# the paged client store's spill tier (repro.federated.fleet.paged_store).
+_STORAGE_UINT = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def storage_dtype(dtype) -> np.dtype:
+    """The raw-bit dtype an array of `dtype` is serialised as."""
+    dtype = np.dtype(dtype)
+    view = _STORAGE_UINT.get(dtype.itemsize)
+    if dtype.isbuiltin != 1 and view is not None:
+        return np.dtype(view)
+    return dtype
+
+
+def storage_view(arr: np.ndarray) -> np.ndarray:
+    """Bit-view a host array into its serialisable storage dtype (no copy)."""
+    view = storage_dtype(arr.dtype)
+    return arr.view(view) if view != arr.dtype else arr
+
+
+def from_storage_view(arr: np.ndarray, dtype) -> np.ndarray:
+    """Invert ``storage_view``: raw uint bits back to the target dtype."""
+    dtype = np.dtype(dtype)
+    if arr.dtype != dtype and arr.dtype.kind in ("u", "V") \
+            and arr.dtype.itemsize == dtype.itemsize:
+        return arr.view(dtype)
+    return arr
+
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path)
-        arr = np.asarray(leaf)
-        view = {1: np.uint8, 2: np.uint16, 4: np.uint32,
-                8: np.uint64}.get(arr.dtype.itemsize)
-        if arr.dtype.isbuiltin != 1 and view is not None:
-            # ml_dtypes (bf16, fp8, ...) don't round-trip through npz —
-            # some versions expose them as kind "V", newer ones as kind
-            # "f", and either way np.load chokes on the descriptor.  Store
-            # the raw bits; restore views them back as the target dtype.
-            arr = arr.view(view)
-        flat[key] = arr
+        flat[key] = storage_view(np.asarray(leaf))
     return flat
 
 
@@ -75,11 +97,8 @@ def restore_checkpoint(directory: str, step: int, like: Any) -> Any:
     for path_k, leaf in leaves_with_path[0]:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path_k)
-        arr = data[key]
-        like_dtype = np.asarray(leaf).dtype
-        if arr.dtype != like_dtype and arr.dtype.kind in ("u", "V") \
-                and arr.dtype.itemsize == like_dtype.itemsize:
-            arr = arr.view(like_dtype)      # raw-bit ml_dtypes round-trip
+        # raw-bit ml_dtypes round-trip
+        arr = from_storage_view(data[key], np.asarray(leaf).dtype)
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")

@@ -272,6 +272,14 @@ class FedConfig:
     # topk_frac / qsgd_bits when these are None
     downlink_topk_frac: Optional[float] = None
     downlink_qsgd_bits: Optional[int] = None
+    # two-tier fleet topology (repro.federated.fleet, DESIGN.md §Fleet):
+    # 0 = flat aggregation (the server reduces all K deltas directly);
+    # R >= 1 = hierarchical — the round's deltas chunk into R contiguous
+    # regional cohorts, each reduced by a regional aggregator, and the
+    # global server combines the R partials with fp32 cast-on-write.
+    # R = 1 is the identity configuration: bit-identical to flat (tested
+    # per engine in the CI Hierarchical parity axis).
+    fleet_regions: int = 0
 
 
 # ---------------------------------------------------------------------------

@@ -15,8 +15,12 @@
 * ``aggregation``  — pluggable server aggregators (uniform/examples/DRAG).
 * ``compression``  — delta compressors (identity/top-k/QSGD) the transport
                      codecs wrap, with per-client error feedback.
+* ``fleet``        — fleet-scale substrate: two-tier hierarchical
+                     aggregation, memory-bounded paged client store, and
+                     region-aware cohort scheduling.
 
-See DESIGN.md §Engines, §Heterogeneity, §Compression, and §Transport.
+See DESIGN.md §Engines, §Heterogeneity, §Compression, §Transport, and
+§Fleet.
 """
 from repro.federated.aggregation import compute_weights, weighted_mean
 from repro.federated.async_engine import AsyncFederatedSimulator
@@ -24,6 +28,8 @@ from repro.federated.compression import (get_compressor, raw_nbytes,
                                          uplink_nbytes)
 from repro.federated.hetero import (ClientSystemModel, fednova_scale,
                                     staleness_discount)
+from repro.federated.fleet import (FleetScheduler, HierarchicalAggregator,
+                                   PagedClientStore)
 from repro.federated.protocol import RoundProtocol
 from repro.federated.simulator import FederatedSimulator, SimConfig
 from repro.federated.store import ClientStore
@@ -33,4 +39,5 @@ __all__ = ["FederatedSimulator", "SimConfig", "AsyncFederatedSimulator",
            "ClientSystemModel", "fednova_scale", "staleness_discount",
            "compute_weights", "weighted_mean", "get_compressor",
            "raw_nbytes", "uplink_nbytes", "downlink_nbytes",
-           "RoundProtocol", "Transport", "ClientStore", "SparseLeaf"]
+           "RoundProtocol", "Transport", "ClientStore", "SparseLeaf",
+           "FleetScheduler", "HierarchicalAggregator", "PagedClientStore"]

@@ -77,13 +77,14 @@ class AsyncFederatedSimulator(FederatedSimulator):
 
     def __init__(self, fed: FedConfig, sim: SimConfig, hetero: HeteroConfig,
                  x_train, y_train, x_test, y_test, parts: List[np.ndarray],
-                 telemetry=None):
+                 telemetry=None, scheduler=None, store=None):
         if fed.strategy in ASYNC_UNSUPPORTED:
             raise ValueError(
                 f"async engine supports stateless-client strategies only; "
                 f"use the synchronous simulator for {fed.strategy!r}")
         super().__init__(fed, sim, x_train, y_train, x_test, y_test, parts,
-                         telemetry=telemetry)
+                         telemetry=telemetry, scheduler=scheduler,
+                         store=store)
         self.hetero = hetero
         self.system = ClientSystemModel(hetero, self.n_clients,
                                         fed.local_steps)
@@ -222,6 +223,12 @@ class AsyncFederatedSimulator(FederatedSimulator):
 
     # ------------------------------------------------------------------
     def _sample_clients(self, n: int) -> np.ndarray:
+        if self.scheduler is not None:
+            # fleet scheduler: availability/speed-weighted draw (its own
+            # RandomState, so the engine's rng stream is untouched); the
+            # dispatch wave is region-agnostic — a redispatch of 1 has no
+            # meaningful region split
+            return self.scheduler.sample(n)
         sel = SELECTORS[self.sim.selector]
 
         def draw():

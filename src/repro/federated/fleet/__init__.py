@@ -1,0 +1,23 @@
+"""Fleet-scale substrate: two-tier aggregation topology, memory-bounded
+paged client store, and region-aware cohort scheduling (DESIGN.md §Fleet).
+
+* ``hierarchy``   — ``HierarchicalAggregator`` + ``region_sizes``: the
+                    regional/global two-tier reduce ``RoundProtocol``
+                    routes through when ``fed.fleet_regions > 0``
+                    (bitwise == flat at R=1).
+* ``paged_store`` — ``PagedClientStore``: LRU page table with a hard
+                    resident-bytes budget and a compressed spill tier,
+                    duck-typing ``ClientStore``.
+* ``scheduler``   — ``FleetScheduler``: deterministic region-major cohort
+                    sampling with availability/speed weights.
+"""
+from repro.federated.fleet.hierarchy import (HierarchicalAggregator,
+                                             hierarchical_aggregate,
+                                             hierarchical_combine,
+                                             region_sizes, region_slices)
+from repro.federated.fleet.paged_store import PagedClientStore, page_nbytes
+from repro.federated.fleet.scheduler import Cohort, FleetScheduler
+
+__all__ = ["HierarchicalAggregator", "hierarchical_aggregate",
+           "hierarchical_combine", "region_sizes", "region_slices",
+           "PagedClientStore", "page_nbytes", "Cohort", "FleetScheduler"]

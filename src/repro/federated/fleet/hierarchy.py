@@ -1,0 +1,124 @@
+"""Two-tier hierarchical aggregation (DESIGN.md §Fleet).
+
+A real fleet never ships every client delta to one server: edge deltas
+reduce at a regional aggregator and only the R regional partials travel to
+the global tier.  This module maps that topology onto the repo's one
+weighted reduction:
+
+* **stage 1 (regional)** — the round's K deltas chunk into R contiguous
+  regional cohorts (``region_slices``; the ``FleetScheduler`` emits its
+  picks region-major against the same split, so cohort order and jit-side
+  chunking agree by construction).  Each region runs the *existing* reduce
+  over its slice: ``strategy.server_aggregate`` for dense deltas (the
+  fused weighted-delta-reduce kernel under ``use_pallas``), PR 8's
+  ``sparse_weighted_mean`` segment-sum for ``SparseLeaf`` wires — so
+  regional partials cost K·k for sparse uplinks and only the R
+  regional→global partials are dense.
+* **stage 2 (global)** — ``weighted_mean`` over the stacked (R, ...)
+  partials with weights W_r = Σ_{i∈r} w_i: fp32 accumulation, cast to the
+  delta dtype on write.  By linearity Σ_r W_r·M_r / Σ_r W_r equals the
+  flat Σ_i w_i·Δ_i / Σ_i w_i — exactly in real arithmetic, to fp
+  reassociation tolerance in floats.
+
+**Identity configuration (R=1): bitwise.**  Stage 1 is then the verbatim
+flat call on the full slice; stage 2 normalises the single region weight
+to W/W = 1.0 (exact for any finite normal W), multiplies the promoted-fp32
+partial by exactly 1.0, and the dtype round-trip of an unchanged value is
+exact — so the two-tier reduction at R=1 is bit-identical to flat on every
+engine (pinned in tests/test_transport.py and the CI engine-parity
+``Hierarchical`` axis).  FedADC's momentum recursion consumes only the
+stage-2 global aggregate, never a regional partial.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.federated import aggregation as A
+
+
+def region_sizes(total: int, n_regions: int) -> Tuple[int, ...]:
+    """Contiguous chunk sizes for `total` items over `n_regions` regions:
+    the first ``total % n_regions`` regions take the ceiling.  Shared by the
+    scheduler (cohort sizes) and the aggregator (slice bounds) so the two
+    sides cannot disagree about which delta belongs to which region."""
+    if n_regions < 1:
+        raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+    if total < n_regions:
+        raise ValueError(f"{total} items cannot fill {n_regions} regions "
+                         f"(every region needs at least one)")
+    base, rem = divmod(total, n_regions)
+    return tuple(base + 1 if r < rem else base for r in range(n_regions))
+
+
+def region_slices(total: int, n_regions: int) -> Tuple[Tuple[int, int], ...]:
+    """((start, size), ...) static slice bounds matching ``region_sizes``."""
+    out, start = [], 0
+    for size in region_sizes(total, n_regions):
+        out.append((start, size))
+        start += size
+    return tuple(out)
+
+
+def hierarchical_aggregate(deltas, weights, fed, strategy, like=None):
+    """Δ̄ through the two-tier topology (see module docstring).  `deltas`
+    is the stacked (K, ...) pytree — dense or SparseLeaf wire — and
+    `weights` the (K,) aggregation weights; slice bounds are static, so the
+    jit'd round traces once per (K, fleet_regions)."""
+    n_regions = fed.fleet_regions
+    sparse = A.is_sparse_tree(deltas)
+    if sparse and like is None:
+        raise ValueError("sparse-native hierarchical aggregation needs a "
+                         "dense template (like=)")
+    partials, region_w = [], []
+    for start, size in region_slices(weights.shape[0], n_regions):
+        d_r = jax.tree.map(
+            lambda x: jax.lax.slice_in_dim(x, start, start + size), deltas)
+        w_r = jax.lax.slice_in_dim(weights, start, start + size)
+        if sparse:
+            m_r = A.sparse_weighted_mean(d_r, w_r, like,
+                                         use_pallas=fed.use_pallas)
+        else:
+            m_r = strategy.server_aggregate(d_r, w_r, fed)
+        partials.append(m_r)
+        region_w.append(jnp.sum(w_r))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *partials)
+    return A.weighted_mean(stacked, jnp.stack(region_w),
+                           use_pallas=fed.use_pallas)
+
+
+def hierarchical_combine(partials, weights, fed, strategy):
+    """Pod-engine form: the per-pod partial means arriving at the final
+    combine ARE stage-1 units (each pod's client-serial scan is a regional
+    reduce already); chunk the CP pod axis into ``fed.fleet_regions``
+    regions and recombine — exact by the same linearity the flat pod
+    recombination relies on, bitwise at R=1."""
+    return hierarchical_aggregate(partials, weights, fed, strategy)
+
+
+class HierarchicalAggregator:
+    """The two-tier reduce bound to one (fed, strategy) pair — the object
+    ``RoundProtocol`` routes ``aggregate`` through when
+    ``fed.fleet_regions > 0``."""
+
+    def __init__(self, fed, strategy):
+        if fed.fleet_regions < 1:
+            raise ValueError("HierarchicalAggregator needs fleet_regions "
+                             f">= 1, got {fed.fleet_regions}")
+        # fail at composition time, not at trace time inside the round:
+        # every flush must fill every region (buffer_k is the async
+        # engine's round size; 0 falls back to clients_per_round)
+        round_k = fed.buffer_k if fed.buffer_k > 0 else fed.clients_per_round
+        if fed.fleet_regions > round_k:
+            raise ValueError(
+                f"fleet_regions={fed.fleet_regions} exceeds the round's "
+                f"{round_k} deltas; every region needs at least one client")
+        self.fed = fed
+        self.strategy = strategy
+        self.n_regions = fed.fleet_regions
+
+    def __call__(self, deltas, weights, like=None):
+        return hierarchical_aggregate(deltas, weights, self.fed,
+                                      self.strategy, like=like)

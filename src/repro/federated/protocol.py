@@ -52,6 +52,13 @@ class RoundProtocol:
             counters = telemetry.counters if telemetry is not None else None
             self.transport = Transport(fed, counters=counters)
         self.store = store if store is not None else ClientStore()
+        # two-tier fleet topology: aggregate() routes through the regional/
+        # global reduce instead of the flat one (fleet.hierarchy; lazy
+        # import — repro.federated.fleet composes on top of this module)
+        self.hierarchical = None
+        if fed.fleet_regions > 0:
+            from repro.federated.fleet import HierarchicalAggregator
+            self.hierarchical = HierarchicalAggregator(fed, self.strategy)
         if fed.strategy in STATEFUL_SERVER_CORRECTION:
             if fed.aggregator != "uniform":
                 raise ValueError(
@@ -131,6 +138,12 @@ class RoundProtocol:
         SparseLeaf wire takes the sparse-native segment-sum (K·k cost,
         `like` required for the dense output template); stateful-correction
         strategies never reach it (they reject lossy uplinks above)."""
+        if self.hierarchical is not None:
+            # the two-tier topology reuses the same regional reduces
+            # (strategy hook dense, segment-sum sparse) and combines the R
+            # partials in fp32 — every engine inherits it through this one
+            # dispatch point (bitwise == flat at fleet_regions=1)
+            return self.hierarchical(deltas, weights, like=like)
         if A.is_sparse_tree(deltas):
             if like is None:
                 raise ValueError("sparse-native aggregation needs a dense "

@@ -63,8 +63,15 @@ class FederatedSimulator:
     def __init__(self, fed: FedConfig, sim: SimConfig,
                  x_train, y_train, x_test, y_test,
                  parts: List[np.ndarray],
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 scheduler=None, store=None):
         self.fed, self.sim = fed, sim
+        # optional fleet substrate (repro.federated.fleet): a FleetScheduler
+        # replaces the flat SELECTORS pick with region-major cohorts, and a
+        # PagedClientStore bounds the per-client state's resident bytes —
+        # both are engine arguments, like telemetry, so FedConfig hashes
+        # and traces identically with or without them
+        self.scheduler = scheduler
         # observability is an engine argument, not a FedConfig field: the
         # same config must hash/trace identically with telemetry on or off
         self.telemetry = telemetry if telemetry is not None \
@@ -92,7 +99,7 @@ class FederatedSimulator:
         # sharded client store + aggregator, with cross-cutting validation
         # (lossy/weighted aggregation × SCAFFOLD/FedDyn rejections)
         self.protocol = RoundProtocol(fed, strategy=self.strategy,
-                                      telemetry=self.telemetry)
+                                      store=store, telemetry=self.telemetry)
         self.transport = self.protocol.transport
         self.server_state = self.strategy.server_init(self.params)
         self.needs_teacher = fed.distill or fed.strategy in ("fedgkd", "fedntd")
@@ -367,7 +374,12 @@ class FederatedSimulator:
         sel = SELECTORS[self.sim.selector]
         tel = self.telemetry
         for t in range(rounds):
-            if self.sim.selector == "random":
+            if self.scheduler is not None:
+                # region-major cohort: pick k of a scheduler cohort lands
+                # in the aggregator region that owns it by construction
+                picks = self.scheduler.sample_cohort(
+                    self.fed.clients_per_round).clients
+            elif self.sim.selector == "random":
                 picks = sel(self.rng, self.n_clients, self.fed.clients_per_round)
             else:
                 picks = sel(self.rng, self.n_clients,

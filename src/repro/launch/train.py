@@ -40,6 +40,7 @@ from repro.core import tree as T
 from repro.core.strategies import get_strategy
 from repro.federated import aggregation as A
 from repro.federated import store as CS
+from repro.federated.fleet import hierarchy as FH
 from repro.federated.transport import Transport
 from repro.models.registry import get_model
 from repro.telemetry import drift as drift_metrics
@@ -333,8 +334,16 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         # Δ̄ = Σ_p W_p·Δ̄_p / Σ_p W_p = Σ_i w_i·Δ_i / Σ_i w_i by linearity.
         # The per-group sums arrive as fp32 accumulators; the mixed round
         # keeps Δ̄ in f32 for the server update, a pure-low-precision run
-        # casts back to the param dtype on write.
-        mean_delta = strategy.server_aggregate(group_means, gweights, fed)
+        # casts back to the param dtype on write.  Under the two-tier fleet
+        # topology the CP pod partials chunk into fleet_regions regional
+        # partials before the global combine (identity at R=1 — DESIGN.md
+        # §Fleet); each pod is already a stage-1 unit, so nothing changes
+        # inside the client-serial scan.
+        if fed.fleet_regions > 0:
+            mean_delta = FH.hierarchical_combine(group_means, gweights, fed,
+                                                 strategy)
+        else:
+            mean_delta = strategy.server_aggregate(group_means, gweights, fed)
         mean_delta = T.cast(mean_delta,
                             jnp.float32 if mixed else jnp.dtype(
                                 run.param_dtype))

@@ -276,6 +276,57 @@ class TestUnboundedHostAccumulator:
         """, "unbounded-host-accumulator")
         assert got == []
 
+    def test_unbounded_deque_flagged(self):
+        """PR 9 coverage extension (fleet bookkeeping): a deque without
+        maxlen is as unbounded as a list."""
+        got = _check("""
+            from collections import deque
+            class Spill:
+                def __init__(self):
+                    self.waiting = deque()
+                def push(self, e):
+                    self.waiting.appendleft(e)
+        """, "unbounded-host-accumulator")
+        assert len(got) == 1 and "waiting" in got[0].message
+
+    def test_bounded_deque_clean(self):
+        got = _check("""
+            from collections import deque
+            class Spill:
+                def __init__(self):
+                    self.waiting = deque(maxlen=64)
+                def push(self, e):
+                    self.waiting.appendleft(e)
+        """, "unbounded-host-accumulator")
+        assert got == []
+
+    def test_set_add_flagged(self):
+        got = _check("""
+            class Seen:
+                def __init__(self):
+                    self.ids = set()
+                def mark(self, i):
+                    self.ids.add(i)
+        """, "unbounded-host-accumulator")
+        assert len(got) == 1 and "ids" in got[0].message
+
+    def test_ordereddict_with_popitem_clean(self):
+        """The paged store's LRU shape: an OrderedDict page table whose
+        admit path also evicts (popitem) is page-table-bounded, not a
+        grow-only accumulator."""
+        got = _check("""
+            from collections import OrderedDict
+            class Table:
+                def __init__(self):
+                    self.pages = OrderedDict()
+                def admit(self, k, v):
+                    self.pages[k] = v
+                    self.pages.update({k: v})
+                def evict(self):
+                    self.pages.popitem(last=False)
+        """, "unbounded-host-accumulator")
+        assert got == []
+
 
 # ---------------------------------------------------------------------------
 # baseline contract

@@ -116,6 +116,21 @@ class TestSelection:
                                             max_tries=3)
             self._check_pick(pick, counts, n_clients, n_pick)
 
+    def test_selectors_deterministic_under_seed(self):
+        """Both selectors are pure functions of (rng state, arguments):
+        same seed + same counts ⇒ same picks — the property the fleet
+        scheduler's per-region delegation rests on."""
+        counts = (np.random.RandomState(7).rand(20, 6) < 0.4) * 5
+        for seed in range(5):
+            r1 = random_selection(np.random.RandomState(seed), 20, 6)
+            r2 = random_selection(np.random.RandomState(seed), 20, 6)
+            np.testing.assert_array_equal(r1, r2)
+            c1 = class_coverage_selection(np.random.RandomState(seed),
+                                          20, 6, counts, max_tries=4)
+            c2 = class_coverage_selection(np.random.RandomState(seed),
+                                          20, 6, counts, max_tries=4)
+            np.testing.assert_array_equal(c1, c2)
+
     @settings(max_examples=60, deadline=None)
     @given(seed=st.integers(0, 10_000), n_clients=st.integers(2, 12),
            n_classes=st.integers(2, 8), density=st.floats(0.05, 0.9))

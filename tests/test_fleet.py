@@ -1,0 +1,432 @@
+"""Fleet subsystem (DESIGN.md §Fleet): two-tier hierarchical aggregation
+units (balanced region split, R=1 bitwise identity, R>1 linearity against
+a two-level oracle, sparse wires), the memory-bounded ``PagedClientStore``
+(bitwise spill round-trips for fp32/bf16/fp8 leaves, 1-page-budget
+eviction, scatter-to-evicted-page, hard budget, gauges, on-disk spill
+tier, host-backend equivalence, steady-state transfer discipline), and
+the deterministic region-aware ``FleetScheduler`` — plus engine
+integration: a simulator run over the paged store is bit-identical to the
+host store, and scheduler-driven runs are reproducible under seed.
+
+Engine-level flat-vs-hierarchical parity lives in tests/test_transport.py
+(the CI engine-parity matrix's ``Hierarchical`` axis)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing.checkpoint import storage_view
+from repro.configs.base import FedConfig, HeteroConfig
+from repro.core.strategies import get_strategy
+from repro.data.partition import sort_and_partition
+from repro.data.synthetic import make_image_dataset
+from repro.federated import aggregation as A
+from repro.federated.fleet import (Cohort, FleetScheduler,
+                                   HierarchicalAggregator, PagedClientStore,
+                                   hierarchical_aggregate, page_nbytes,
+                                   region_sizes, region_slices)
+from repro.federated.simulator import FederatedSimulator, SimConfig
+from repro.federated.store import ClientStore
+from repro.federated.transport import SparseTopKCodec
+from repro.core import tree as T
+from repro.telemetry.tracer import Counters
+
+
+def _tree(seed=0, shapes=((33, 9), (17,))):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"l{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def _bits_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(storage_view(np.asarray(x)),
+                                      storage_view(np.asarray(y)))
+
+
+# ---------------------------------------------------------------------------
+# hierarchy units
+# ---------------------------------------------------------------------------
+class TestRegionSplit:
+    def test_sizes_balanced_and_total(self):
+        assert region_sizes(10, 3) == (4, 3, 3)
+        assert region_sizes(6, 3) == (2, 2, 2)
+        assert region_sizes(5, 5) == (1, 1, 1, 1, 1)
+        for total, r in [(7, 2), (100, 9), (16, 16)]:
+            sizes = region_sizes(total, r)
+            assert sum(sizes) == total
+            assert max(sizes) - min(sizes) <= 1
+
+    def test_slices_cover_contiguously(self):
+        slices = region_slices(11, 4)
+        assert slices[0][0] == 0
+        for (s0, n0), (s1, _) in zip(slices, slices[1:]):
+            assert s0 + n0 == s1
+        assert slices[-1][0] + slices[-1][1] == 11
+
+    def test_rejects_bad_splits(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            region_sizes(4, 0)
+        with pytest.raises(ValueError, match="cannot fill"):
+            region_sizes(2, 3)
+
+
+class TestHierarchicalAggregate:
+    def _stack(self, n=6):
+        trees = [_tree(s) for s in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    def test_one_region_bitwise_flat(self):
+        fed = FedConfig(fleet_regions=1, clients_per_round=6)
+        strat = get_strategy("fedadc")
+        deltas = self._stack(6)
+        w = jnp.asarray([0.5, 1.2, 0.1, 2.0, 0.7, 0.9], jnp.float32)
+        flat = strat.server_aggregate(deltas, w, fed)
+        hier = hierarchical_aggregate(deltas, w, fed, strat)
+        _bits_equal(flat, hier)
+
+    def test_multi_region_matches_two_level_oracle(self):
+        """R=3 equals the hand-computed two-level weighted mean (exact
+        modulo fp reassociation) — the linearity argument, numerically."""
+        fed = FedConfig(fleet_regions=3, clients_per_round=7)
+        strat = get_strategy("fedadc")
+        deltas = self._stack(7)
+        w = jnp.asarray(np.random.RandomState(0).uniform(0.1, 2.0, 7),
+                        jnp.float32)
+        got = hierarchical_aggregate(deltas, w, fed, strat)
+        wn = np.asarray(w, np.float64)
+        oracle = {}
+        for key, leaf in deltas.items():
+            x = np.asarray(leaf, np.float64)
+            parts, pw = [], []
+            for start, size in region_slices(7, 3):
+                ws = wn[start:start + size]
+                parts.append(np.tensordot(ws / ws.sum(),
+                                          x[start:start + size], axes=1))
+                pw.append(ws.sum())
+            pw = np.asarray(pw)
+            oracle[key] = np.tensordot(pw / pw.sum(), np.stack(parts),
+                                       axes=1)
+        for key in oracle:
+            np.testing.assert_allclose(np.asarray(got[key]), oracle[key],
+                                       rtol=0, atol=1e-6)
+
+    def test_sparse_one_region_bitwise(self):
+        like = _tree(9)
+        codec = SparseTopKCodec(0.2)
+        wires = [codec.encode(_tree(s), T.zeros_like(like),
+                              jax.random.PRNGKey(s))[0] for s in (1, 2, 3)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *wires)
+        w = jnp.asarray([0.3, 0.5, 0.2], jnp.float32)
+        fed = FedConfig(fleet_regions=1, clients_per_round=3)
+        flat = A.sparse_weighted_mean(stacked, w, like)
+        hier = hierarchical_aggregate(stacked, w, fed,
+                                      get_strategy("fedadc"), like=like)
+        _bits_equal(flat, hier)
+
+    def test_sparse_requires_template(self):
+        like = _tree(9)
+        wire, _ = SparseTopKCodec(0.2).encode(_tree(1), T.zeros_like(like),
+                                              jax.random.PRNGKey(0))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), wire)
+        fed = FedConfig(fleet_regions=1, clients_per_round=1)
+        with pytest.raises(ValueError, match="like"):
+            hierarchical_aggregate(stacked, jnp.ones((1,)), fed,
+                                   get_strategy("fedadc"))
+
+    def test_aggregator_rejects_more_regions_than_round(self):
+        with pytest.raises(ValueError, match="region"):
+            HierarchicalAggregator(
+                FedConfig(fleet_regions=5, clients_per_round=3),
+                get_strategy("fedadc"))
+        # buffer_k is the async round size when set
+        HierarchicalAggregator(
+            FedConfig(fleet_regions=5, clients_per_round=3, buffer_k=5),
+            get_strategy("fedadc"))
+
+
+# ---------------------------------------------------------------------------
+# paged client store
+# ---------------------------------------------------------------------------
+def _page_bytes(d=8, dtype=jnp.float32):
+    return int(np.dtype(np.float32).itemsize if dtype == jnp.float32
+               else jnp.zeros((), dtype).dtype.itemsize) * d
+
+
+class TestPagedStore:
+    def _store(self, budget, **kw):
+        s = PagedClientStore(budget_bytes=budget, **kw)
+        s.register("ef", lambda: jnp.zeros((8,), jnp.float32))
+        return s
+
+    def test_gather_initialises_then_round_trips(self):
+        s = self._store(10 ** 6)
+        got = s.gather("ef", [0, 1])
+        assert got.shape == (2, 8) and float(jnp.sum(jnp.abs(got))) == 0
+        vals = jnp.arange(16, dtype=jnp.float32).reshape(2, 8)
+        s.scatter("ef", [0, 1], vals)
+        _bits_equal(s.gather("ef", [0, 1]), vals)
+
+    def test_eviction_under_one_page_budget(self):
+        page = 8 * 4
+        s = self._store(page, counters=Counters())
+        vals = jnp.arange(24, dtype=jnp.float32).reshape(3, 8)
+        s.scatter("ef", [0, 1, 2], vals)
+        assert s.resident_pages == 1 and s.spilled_pages == 2
+        assert s.resident_bytes == page <= s.budget_bytes
+        # every page still reads back exactly, thrashing through the spill
+        for c in (0, 1, 2):
+            _bits_equal(s.gather("ef", [c]), vals[c:c + 1])
+        assert s.counters.snapshot()["store.loads"] >= 2
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16",
+                                       "float8_e4m3fn"])
+    def test_spilled_page_round_trips_bitwise(self, dtype):
+        """Evict → compress (uint bit-view, the checkpoint trick) → load
+        must be bit-identical for non-builtin dtypes too, including values
+        a float round-trip would mangle (negative zero, subnormals)."""
+        dt = jnp.dtype(dtype)
+        s = PagedClientStore(budget_bytes=16 * dt.itemsize)
+        s.register("st", lambda: jnp.zeros((16,), dt))
+        rng = np.random.RandomState(3)
+        vals = jnp.asarray(rng.randn(3, 16), jnp.float32).astype(dt)
+        vals = vals.at[:, 0].set(jnp.asarray(-0.0, dt))
+        s.scatter("st", [0, 1, 2], vals)
+        assert s.spilled_pages == 2            # budget holds one page
+        _bits_equal(s.gather("st", [0, 1, 2]), vals)
+
+    def test_scatter_to_evicted_page_supersedes_spill(self):
+        page = 8 * 4
+        s = self._store(page)
+        v1 = jnp.ones((1, 8), jnp.float32)
+        s.scatter("ef", [0], v1)
+        s.scatter("ef", [1], v1 * 2)           # evicts client 0 to spill
+        assert s.spilled_pages == 1
+        v2 = jnp.full((1, 8), 7.0, jnp.float32)
+        s.scatter("ef", [0], v2)               # write to the evicted page
+        _bits_equal(s.gather("ef", [0]), v2)
+        # exactly one live version per page: the stale spill copy is gone
+        assert s.resident_pages + s.spilled_pages == 2
+
+    def test_budget_never_exceeded(self):
+        page = 8 * 4
+        s = self._store(3 * page)
+        rng = np.random.RandomState(0)
+        for r in range(5):
+            ids = rng.choice(20, size=4, replace=False)
+            s.scatter("ef", ids, jnp.asarray(
+                rng.randn(4, 8).astype(np.float32)))
+            assert s.resident_bytes <= s.budget_bytes
+        assert s.peak_resident_bytes <= s.budget_bytes
+        assert s.peak_resident_bytes == 3 * page
+
+    def test_gauges_published(self):
+        c = Counters()
+        page = 8 * 4
+        s = self._store(2 * page, counters=c)
+        s.scatter("ef", [0, 1, 2], jnp.ones((3, 8), jnp.float32))
+        snap = c.snapshot()
+        assert snap["store.resident_pages"] == 2
+        assert snap["store.resident_bytes"] == 2 * page
+        assert snap["store.spilled_pages"] == 1
+        assert snap["store.spills"] == 1
+        s.gather("ef", [0])
+        assert c.snapshot()["store.loads"] == 1
+
+    def test_spill_dir_on_disk(self, tmp_path):
+        page = 8 * 4
+        s = self._store(page, spill_dir=str(tmp_path))
+        vals = jnp.arange(16, dtype=jnp.float32).reshape(2, 8)
+        s.scatter("ef", [0, 1], vals)
+        assert len(list(tmp_path.glob("*.page"))) == 1
+        _bits_equal(s.gather("ef", [0]), vals[:1])   # load removes the file
+        assert list(tmp_path.glob("*.page")) == [] or s.spilled_pages == 1
+
+    def test_states_view_and_namespaces(self):
+        s = self._store(8 * 4)
+        assert s.namespaces() == ("ef",)
+        s.scatter("ef", [3, 5], jnp.ones((2, 8), jnp.float32))
+        view = s.states("ef")
+        assert sorted(view) == [3, 5] and 3 in view and 4 not in view
+        _bits_equal(view[5], jnp.ones((8,), jnp.float32))
+        view[4] = jnp.zeros((8,), jnp.float32)
+        assert len(view) == 3
+        del view[4]
+        assert sorted(view) == [3, 5]
+        with pytest.raises(KeyError):
+            view[99]
+
+    def test_matches_host_backend_bitwise(self):
+        """The same gather/scatter sequence against the host dict store and
+        a 2-page paged store must produce identical device values."""
+        host = ClientStore()
+        paged = self._store(2 * 8 * 4)
+        host.register("ef", lambda: jnp.zeros((8,), jnp.float32))
+        rng = np.random.RandomState(1)
+        for r in range(6):
+            ids = rng.choice(12, size=3, replace=False)
+            gh = host.gather("ef", ids)
+            gp = paged.gather("ef", ids)
+            _bits_equal(gh, gp)
+            upd = jnp.asarray(rng.randn(3, 8).astype(np.float32))
+            host.scatter("ef", ids, gh + upd)
+            paged.scatter("ef", ids, gp + upd)
+        assert paged.spilled_pages > 0          # the comparison saw spills
+
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        """gather's jnp.asarray and scatter's device_get are the only wire
+        points — spill/load cycles stay clean under the disallow guard."""
+        s = self._store(8 * 4)
+        # warm: first gather materialises the namespace template (its init
+        # fn may allocate on device), first scatter pays the initial H2D
+        s.gather("ef", [0])
+        s.scatter("ef", [0, 1], jnp.ones((2, 8), jnp.float32))
+        with steady_state_guard():
+            got = s.gather("ef", [0, 1, 2])
+            s.scatter("ef", [0, 1, 2], got + got)
+            s.gather("ef", [1])
+
+    def test_page_nbytes_counts_all_leaves(self):
+        page = {"a": np.zeros((4,), np.float32),
+                "b": np.zeros((2, 3), np.int32)}
+        assert page_nbytes(page) == 4 * 4 + 6 * 4
+
+    def test_rejects_nonpositive_budget(self):
+        with pytest.raises(ValueError, match="budget"):
+            PagedClientStore(budget_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# fleet scheduler
+# ---------------------------------------------------------------------------
+class TestFleetScheduler:
+    def _fed(self, n=40, k=8, regions=4):
+        return FedConfig(n_clients=n, clients_per_round=k,
+                         fleet_regions=regions)
+
+    def test_deterministic_under_seed(self):
+        for seed in range(3):
+            a = FleetScheduler(self._fed(), seed=seed)
+            b = FleetScheduler(self._fed(), seed=seed)
+            for _ in range(4):
+                ca, cb = a.sample_cohort(), b.sample_cohort()
+                np.testing.assert_array_equal(ca.clients, cb.clients)
+                assert ca.sizes == cb.sizes
+            np.testing.assert_array_equal(a.sample(5), b.sample(5))
+
+    def test_cohort_is_region_major_with_shared_split(self):
+        s = FleetScheduler(self._fed(n=40, k=10, regions=3))
+        c = s.sample_cohort()
+        assert c.sizes == region_sizes(10, 3)
+        for r, (start, size) in enumerate(c.region_slices()):
+            sub = c.clients[start:start + size]
+            lo, n = s.bounds[r]
+            assert ((sub >= lo) & (sub < lo + n)).all()
+            assert len(set(sub.tolist())) == size
+            assert all(s.region_of(int(cid)) == r for cid in sub)
+
+    def test_pod_client_ids_grid(self):
+        c = Cohort(np.arange(6), (3, 3))
+        grid = c.pod_client_ids(2, 3)
+        assert grid.shape == (2, 3) and grid.dtype == np.int32
+        np.testing.assert_array_equal(grid.ravel(), np.arange(6))
+        with pytest.raises(ValueError, match="pod grid"):
+            c.pod_client_ids(2, 2)
+
+    def test_class_coverage_delegation(self):
+        """Per-region picks run selection.py's coverage selector on the
+        region's sub-population and map back to global ids."""
+        n, classes = 24, 4
+        counts = np.zeros((n, classes))
+        counts[np.arange(n), np.arange(n) % classes] = 5
+        s = FleetScheduler(self._fed(n=n, k=8, regions=2),
+                           selector="class_coverage", counts=counts, seed=0)
+        c = s.sample_cohort()
+        for start, size in c.region_slices():
+            sub = c.clients[start:start + size]
+            assert (counts[sub].sum(0) > 0).all()
+
+    def test_speed_weights_bias_sampling(self):
+        """A client with overwhelming speed weight appears in essentially
+        every weighted draw."""
+        het = HeteroConfig(enabled=True, speed_dist="constant")
+        s = FleetScheduler(self._fed(n=10, k=2, regions=1), het, seed=0)
+        s.speeds = np.ones(10)
+        s.speeds[7] = 1e6
+        hits = sum(7 in s.sample_cohort().clients for _ in range(50))
+        assert hits >= 48
+
+    def test_availability_thinning_never_underfills(self):
+        het = HeteroConfig(enabled=True, availability=0.05, seed=1)
+        s = FleetScheduler(self._fed(n=12, k=6, regions=2), het, seed=1)
+        for _ in range(10):
+            c = s.sample_cohort()
+            assert len(c.clients) == 6
+            assert len(set(c.clients.tolist())) == 6
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="selector"):
+            FleetScheduler(self._fed(), selector="bogus")
+        with pytest.raises(ValueError, match="counts"):
+            FleetScheduler(self._fed(), selector="class_coverage")
+        with pytest.raises(ValueError, match="n_regions"):
+            FleetScheduler(self._fed(n=4), n_regions=5)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_data():
+    x, y, xt, yt = make_image_dataset(400, 100, 10, image_size=16, seed=0,
+                                      noise=0.5)
+    parts = sort_and_partition(y, 10, s=2, seed=0)
+    return x, y, xt, yt, parts
+
+
+def _sim(rounds=2):
+    return SimConfig(model="cnn", n_classes=10, batch_size=16, rounds=rounds,
+                     eval_every=rounds, cnn_width=8, seed=1)
+
+
+def _fed(**kw):
+    base = dict(strategy="fedadc", local_steps=2, clients_per_round=3,
+                n_clients=10, eta=0.03, beta_global=0.6, beta_local=0.6)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+class TestEngineIntegration:
+    def test_paged_store_bitwise_vs_host(self, small_data):
+        """A full simulator run (top-k + EF exercises per-client state
+        every round) over a paged store that cannot hold the cohort is
+        bit-identical to the host-dict store."""
+        x, y, xt, yt, parts = small_data
+        fed = _fed(compressor="topk", topk_frac=0.2)
+        a = FederatedSimulator(fed, _sim(3), x, y, xt, yt, parts)
+        # a couple of pages fit (a CNN state page is ~0.75 MB) but the
+        # 10-client fleet's state+EF pages do not -> steady-state spilling
+        store = PagedClientStore(budget_bytes=2 << 20, counters=Counters())
+        b = FederatedSimulator(fed, _sim(3), x, y, xt, yt, parts,
+                               store=store)
+        a.run(), b.run()
+        _bits_equal(a.params, b.params)
+        assert store.peak_resident_bytes <= store.budget_bytes
+        assert store.counters.snapshot().get("store.spills", 0) > 0
+        efa, efb = a.protocol.store.states("ef"), b.protocol.store.states("ef")
+        assert sorted(efa) == sorted(efb)
+        for cid in efa:
+            _bits_equal(efa[cid], efb[cid])
+
+    def test_scheduler_feeds_simulator_deterministically(self, small_data):
+        x, y, xt, yt, parts = small_data
+        fed = _fed(fleet_regions=3, n_clients=10, clients_per_round=6)
+        runs = []
+        for _ in range(2):
+            sched = FleetScheduler(fed, seed=5)
+            s = FederatedSimulator(fed, _sim(2), x, y, xt, yt, parts,
+                                   scheduler=sched)
+            s.run()
+            runs.append(s.params)
+        _bits_equal(runs[0], runs[1])

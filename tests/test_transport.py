@@ -939,6 +939,133 @@ class TestSparseAggTransportPod:
 
 
 # ---------------------------------------------------------------------------
+# two-tier hierarchical aggregation (DESIGN.md §Fleet): with ONE region the
+# regional reduce IS the flat reduce, and the global combine is a weighted
+# mean over a single partial whose normalised weight is exactly 1.0
+# (IEEE W/W), so the two-tier path is BITWISE the flat path on every
+# engine — the CI engine-parity matrix's fourth codec axis.  With R > 1
+# the fp32 sums reassociate, so parity is tolerance-bounded.
+# ---------------------------------------------------------------------------
+class TestHierarchicalTransportSync:
+    def test_one_region_bit_exact(self, data):
+        x, y, xt, yt, parts = data
+        a = FederatedSimulator(_fed(), _sim(), x, y, xt, yt, parts)
+        b = FederatedSimulator(_fed(fleet_regions=1), _sim(), x, y, xt, yt,
+                               parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+
+    def test_one_region_sparse_wire_bit_exact(self, data):
+        """The regional stage reuses the sparse-native segment-sum, so the
+        sparse wire + EF trajectory is also bitwise under one region (EF is
+        client-side and must come out identical too)."""
+        x, y, xt, yt, parts = data
+        a = FederatedSimulator(_sparse_fed(sparse_aggregate=True), _sim(),
+                               x, y, xt, yt, parts)
+        b = FederatedSimulator(_sparse_fed(sparse_aggregate=True,
+                                           fleet_regions=1), _sim(),
+                               x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+        efa, efb = a.protocol.store.states("ef"), b.protocol.store.states("ef")
+        assert sorted(efa) == sorted(efb)
+        for cid in efa:
+            _assert_trees_equal(efa[cid], efb[cid], exact=True)
+
+    def test_multi_region_matches_flat_within_tol(self, data):
+        x, y, xt, yt, parts = data
+        a = FederatedSimulator(_fed(), _sim(), x, y, xt, yt, parts)
+        b = FederatedSimulator(_fed(fleet_regions=3), _sim(), x, y, xt, yt,
+                               parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=False, atol=1e-5)
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(_fed(fleet_regions=2), _sim(2), x, y, xt, yt,
+                               parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
+
+
+class TestHierarchicalTransportAsync:
+    def test_one_region_bit_exact(self, data):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        a = AsyncFederatedSimulator(_fed(), _sim(), het, x, y, xt, yt, parts)
+        b = AsyncFederatedSimulator(_fed(fleet_regions=1), _sim(), het,
+                                    x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+
+    def test_buffered_k_one_region_bit_exact(self, data):
+        """The buffered-K flush aggregates whatever cohort the buffer
+        holds; with one region the hierarchical flush is still bitwise."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, speed_dist="lognormal", seed=2)
+        a = AsyncFederatedSimulator(_fed(buffer_k=2), _sim(), het, x, y,
+                                    xt, yt, parts)
+        b = AsyncFederatedSimulator(_fed(buffer_k=2, fleet_regions=1),
+                                    _sim(), het, x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+
+    def test_steady_state_transfer_guard(self, data, steady_state_guard):
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        s = AsyncFederatedSimulator(_fed(fleet_regions=2), _sim(2), het,
+                                    x, y, xt, yt, parts)
+        s.run()
+        with steady_state_guard():
+            s.run(2)
+
+
+class TestHierarchicalTransportPod:
+    def _setup(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import init_state, make_train_step
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="float32")
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 2, 2, 2, 32))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        return make_host_mesh(), mcfg, run, batch, init_state, make_train_step
+
+    def test_pod_one_region_bit_exact(self):
+        """The pod engine's per-pod means are the regional partials; with
+        fleet_regions=1 the global combine reduces to the flat
+        server_aggregate over the CP axis, bitwise."""
+        kw = dict(strategy="fedadc", clients_per_round=2, local_steps=2,
+                  eta=0.05)
+        mesh, mcfg, run, batch, init_state, make_train_step = self._setup()
+        with mesh:
+            fed_a = FedConfig(**kw)
+            fed_b = FedConfig(fleet_regions=1, **kw)
+            state = init_state(jax.random.PRNGKey(0), mcfg, fed_a, run)
+            sa, _ = make_train_step(mcfg, fed_a, run)(state, batch)
+            sb, mb = make_train_step(mcfg, fed_b, run)(state, batch)
+            _assert_trees_equal(sa["params"], sb["params"], exact=True)
+            assert np.isfinite(float(mb["loss"]))
+
+    def test_steady_state_transfer_guard(self, steady_state_guard):
+        # the host-mesh batch carries ONE pod on the CP axis, so one region
+        # is the only valid split — region_sizes rejects R > pods
+        fed = FedConfig(strategy="fedadc", clients_per_round=2,
+                        local_steps=2, eta=0.05, fleet_regions=1)
+        mesh, mcfg, run, batch, init_state, make_train_step = self._setup()
+        with mesh:
+            state = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+            step = jax.jit(make_train_step(mcfg, fed, run))
+            state, _ = step(state, batch)
+            with steady_state_guard():
+                state, m = step(state, batch)
+            assert np.isfinite(float(jax.device_get(m["loss"])))
+
+
+# ---------------------------------------------------------------------------
 # pod engine: top-k + EF through the sharded store
 # ---------------------------------------------------------------------------
 class TestPodErrorFeedback:

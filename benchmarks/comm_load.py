@@ -22,12 +22,14 @@ accuracy; here they are reported against the analytic floor so the two
 accountings can be compared at a glance.
 """
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import ARCHS
 from repro.configs.base import FedConfig
 from repro.core.strategies import get_strategy
 from repro.federated import compression as C
+from repro.federated.reference import ReferenceStore
 from repro.federated.transport import Transport
 from repro.models.registry import get_model
 
@@ -85,6 +87,55 @@ DOWNLINK = (
 )
 
 
+def _unicast_totals(fed: FedConfig, tpl, schedule):
+    """Accounting-only replay of a participation schedule through the
+    unicast ReferenceStore (no training): round v dispatches schedule[v],
+    each client classified fresh/catch-up/resync against its last version."""
+    t = Transport(fed)
+    t.set_wire_templates(tpl[0], tpl)
+    refs = ReferenceStore(fed, t)
+    for v, clients in enumerate(schedule):
+        refs.dispatch(clients, v)
+    return t.downlink_bytes, int(refs.catchups), int(refs.resyncs)
+
+
+def _multicast_totals(fed: FedConfig, tpl, schedule):
+    t = Transport(fed)
+    t.set_wire_templates(tpl[0], tpl)
+    for v, clients in enumerate(schedule):
+        t.account_downlink(len(clients), resync=(v == 0))
+    return t.downlink_bytes
+
+
+def unicast_rows(rows, arch: str, shapes, rounds=12, n_clients=8):
+    """Unicast vs multicast downlink bytes side by side, per (lossless
+    delta) codec spelling: under full participation the per-client
+    schedule degenerates to the multicast one byte-for-byte; under
+    intermittent participation the catch-up horizon is what separates
+    cheap chained deltas from full-θ resyncs."""
+    full = [list(range(n_clients))] * rounds
+    rng = np.random.RandomState(0)
+    intermittent = [[c for c in range(n_clients) if rng.rand() < 0.5]
+                    for _ in range(rounds)]
+    for codec in ("delta", "delta+identity"):
+        for h in (4, 0):
+            fed = FedConfig(strategy="fedadc", downlink_compressor=codec,
+                            downlink_unicast=True, resync_horizon=h,
+                            n_clients=n_clients)
+            tpl = broadcast_template("fedadc", shapes, fed)
+            mcast = _multicast_totals(fed, tpl, full)
+            ucast, _, _ = _unicast_totals(fed, tpl, full)
+            ib, cu, rs = _unicast_totals(fed, tpl, intermittent)
+            rows.append(emit(
+                f"comm.{arch}.unicast.{codec.replace('+', '_')}.h{h}", 0,
+                f"full_unicast_GB={ucast/2**30:.3f};"
+                f"full_multicast_GB={mcast/2**30:.3f};"
+                f"full_eq_multicast={ucast == mcast};"
+                f"intermittent_GB={ib/2**30:.3f};"
+                f"catchups={cu};resyncs={rs}"))
+    return rows
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     for arch in ("qwen3-4b", "qwen3-14b"):
@@ -130,6 +181,7 @@ def main(rows=None):
             f"comm.{arch}.fedadc_delta_downlink", 0,
             f"vs_raw_params={b/raw:.3f}x;naive={naive/raw:.2f}x;"
             f"le_1p1={b <= 1.1 * raw}"))
+        unicast_rows(rows, arch, shapes)
     return rows
 
 

@@ -80,6 +80,13 @@ DOWNLINK_KNOBS = (
                           "downlink_qsgd_bits": 8}),
 )
 
+# intermittent participation × catch-up horizon: the unicast downlink under
+# clients that miss rounds (HeteroConfig availability thinning on the async
+# engine).  The horizon is accounting-only — the trajectory is identical
+# across it — but the bytes are not: staleness ≤ horizon rides the cheap
+# chained θ-delta, horizon 0 degenerates to a full-θ resync per revisit.
+INTERMITTENT_GRID = tuple((av, h) for av in (1.0, 0.5) for h in (0, 4))
+
 
 def _cell(name_kv, r):
     s = r["sim"]
@@ -171,7 +178,39 @@ def async_sweep(rounds=80, n_clients=20, seed=0):
     return cells, drift
 
 
-def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
+def intermittent_sweep(rounds=40, n_clients=20, seed=0):
+    """FedADC + lossless delta + unicast on the async engine over the
+    availability × resync_horizon grid, with the per-class byte totals the
+    CI gate pins."""
+    data = dataset()
+    parts = partitions(data[1], n_clients, "sort", 2, seed=seed)
+    cells = []
+    for av, h in INTERMITTENT_GRID:
+        het = HeteroConfig(enabled=True, speed_dist="bimodal",
+                           straggler_frac=0.25, straggler_slowdown=4.0,
+                           availability=av, seed=0)
+        extra = {"downlink_compressor": "delta", "downlink_unicast": True,
+                 "resync_horizon": h, "buffer_k": 2}
+        r = run_fl_async("fedadc", parts, data, hetero=het, rounds=rounds,
+                         n_clients=n_clients, seed=seed, extra_fed=extra)
+        s = r["sim"]
+        t = s.transport
+        n_catchup, n_resync = int(s.refs.catchups), int(s.refs.resyncs)
+        cells.append({
+            "availability": av, "resync_horizon": h,
+            "acc": round(r["acc"], 4),
+            "downlink_bytes": int(s.downlink_bytes),
+            "downlink_bytes_raw": int(s.downlink_bytes_raw),
+            "catchups": n_catchup, "resyncs": n_resync,
+            "catchup_bytes": int(n_catchup * t._down_nbytes),
+            "resync_bytes": int(n_resync * t._down_raw),
+            "us_per_round": r["us_per_round"],
+        })
+    return cells
+
+
+def main(rows=None, rounds=90, async_rounds=80, intermittent_rounds=40,
+         out_json="BENCH_comm.json"):
     rows = rows if rows is not None else []
     cells, drift = sweep(rounds=rounds)
     by = {(c["strategy"], c["compressor"]): c for c in cells}
@@ -191,6 +230,13 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
             f"acc={c['acc']};up_MB={c['uplink_bytes']/2**20:.2f};"
             f"stale={c['mean_staleness']:.2f};"
             f"reduction={c['bytes_reduction']:.2f}x"))
+    intermittent_cells = intermittent_sweep(rounds=intermittent_rounds)
+    for c in intermittent_cells:
+        rows.append(emit(
+            f"comm_sweep.intermittent.av{c['availability']}"
+            f".h{c['resync_horizon']}", c["us_per_round"],
+            f"acc={c['acc']};down_MB={c['downlink_bytes']/2**20:.2f};"
+            f"catchups={c['catchups']};resyncs={c['resyncs']}"))
     downlink_cells = downlink_sweep(by[("fedadc", "none")], rounds=rounds)
     for c in downlink_cells:
         rows.append(emit(
@@ -218,13 +264,24 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
         f"delta={delta_ratio:.3f}x;naive="
         f"{d_none['downlink_vs_uplink_raw']:.3f}x;"
         f"lossless_acc_equal={d_delta['acc'] == d_none['acc']}"))
+    inter = {(c["availability"], c["resync_horizon"]): c
+             for c in intermittent_cells}
+    i_h4, i_h0 = inter[(0.5, 4)], inter[(0.5, 0)]
+    rows.append(emit(
+        "comm_sweep.unicast_catchup_vs_resync", 0,
+        f"h4_MB={i_h4['downlink_bytes']/2**20:.2f};"
+        f"h0_MB={i_h0['downlink_bytes']/2**20:.2f};"
+        f"catchup_lt_resync={i_h4['downlink_bytes'] < i_h0['downlink_bytes']};"
+        f"acc_equal={i_h4['acc'] == i_h0['acc']}"))
     report = {
         "benchmark": "synthetic non-IID (sorted 2-class shards)",
         "rounds": rounds,
         "async_rounds": async_rounds,
+        "intermittent_rounds": intermittent_rounds,
         "cells": cells,
         "async_cells": async_cells,
         "downlink_cells": downlink_cells,
+        "intermittent_cells": intermittent_cells,
         # per-round in-jit drift diagnostics (curve endpoints; underscore
         # keys so the CI --require gate can address them as dotted paths)
         "drift": drift,
@@ -248,6 +305,12 @@ def main(rows=None, rounds=90, async_rounds=80, out_json="BENCH_comm.json"):
             "downlink_delta_le_1p1": bool(delta_ratio <= 1.1),
             "downlink_delta_lossless": bool(
                 d_delta["acc"] == d_none["acc"]),
+            # intermittent participation: catch-up deltas within the
+            # horizon are strictly cheaper than per-revisit full-θ resyncs
+            # for the same (accounting-invariant) trajectory
+            "unicast_catchup_lt_resync": bool(
+                i_h4["downlink_bytes"] < i_h0["downlink_bytes"]
+                and i_h4["acc"] == i_h0["acc"]),
         },
     }
     with open(out_json, "w") as f:
@@ -263,8 +326,11 @@ if __name__ == "__main__":
                          "(90 sync / 80 async rounds) regardless of --rounds")
     ap.add_argument("--rounds", type=int, default=90)
     ap.add_argument("--async-rounds", type=int, default=80)
+    ap.add_argument("--intermittent-rounds", type=int, default=40)
     ap.add_argument("--out", default="BENCH_comm.json")
     args = ap.parse_args()
     main(rounds=90 if args.smoke else args.rounds,
          async_rounds=80 if args.smoke else args.async_rounds,
+         intermittent_rounds=40 if args.smoke
+         else args.intermittent_rounds,
          out_json=args.out)

@@ -5,22 +5,38 @@ engine (buffer_k = clients_per_round) barriers on the slowest client of every
 round; the semi-async engine applies the server update as soon as the
 fastest half of the wave arrives, discounting the momentum contribution of
 any stale delta that trickles in later.  Both run a top-k 10% + error-
-feedback uplink, and the table reports the measured wire bytes from the
-round protocol's transport (up = compressed deltas, down = the (θ_t, m̄_t)
-broadcast).  Accuracy is plotted against the *virtual clock* (one unit =
-one local step on the reference client), so the comparison is
+feedback uplink and a **unicast delta downlink**: every dispatched client
+is served individually against *its* last-seen server version — a chained
+Δθ catch-up when it is ≤ ``resync_horizon`` versions stale, a full-θ
+resync beyond that — so the down-MB column is the measured per-client
+unicast bytes, and the per-client table below shows who paid for
+catch-ups vs resyncs.  Accuracy is plotted against the *virtual clock*
+(one unit = one local step on the reference client), so the comparison is
 wall-clock-fair.
 
-Run:  PYTHONPATH=src python examples/async_straggler.py
+Run:  PYTHONPATH=src python examples/async_straggler.py \
+          [--telemetry-jsonl out.jsonl]
+
+``--telemetry-jsonl`` streams every telemetry event — including the
+``downlink.catchups`` / ``downlink.resyncs`` counters and the per-client
+``downlink.client_kb`` histogram — to the given JSONL file; the CI
+telemetry-smoke job validates that export against the schema.
 """
+import argparse
+
 from repro.configs.base import FedConfig, HeteroConfig
 from repro.data.partition import sort_and_partition
 from repro.data.synthetic import make_image_dataset
 from repro.federated.async_engine import AsyncFederatedSimulator
 from repro.federated.simulator import SimConfig
+from repro.telemetry import Telemetry
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--telemetry-jsonl", default=None,
+                    help="enable telemetry and write events to this file")
+    args = ap.parse_args()
     x, y, xt, yt = make_image_dataset(3000, 600, n_classes=10,
                                       image_size=16, noise=0.6, seed=0)
     parts = sort_and_partition(y, n_clients=20, s=2, seed=0)
@@ -28,26 +44,44 @@ def main():
                           straggler_frac=0.25, straggler_slowdown=4.0,
                           seed=0)
     print(f"{'mode':>6} {'rounds':>7} {'virtual time':>13} {'final acc':>10}"
-          f" {'up MB':>7} {'down MB':>8}")
-    results = {}
+          f" {'up MB':>7} {'down MB':>8} {'catchup':>8} {'resync':>7}")
+    results, engines = {}, {}
+    sink = open(args.telemetry_jsonl, "w") if args.telemetry_jsonl else None
     for mode, buffer_k, rounds in (("sync", 0, 20), ("semi", 4, 60)):
         fed = FedConfig(strategy="fedadc", local_steps=8,
                         clients_per_round=8, n_clients=20, eta=0.02,
                         beta_global=0.7, beta_local=0.7, buffer_k=buffer_k,
                         staleness_mode="poly", staleness_factor=0.5,
                         compressor="topk", topk_frac=0.1,
-                        error_feedback=True)
+                        error_feedback=True,
+                        downlink_compressor="delta",
+                        downlink_unicast=True, resync_horizon=2)
         sim = SimConfig(model="cnn", n_classes=10, batch_size=32,
                         rounds=rounds, eval_every=5, cnn_width=8, seed=0)
-        eng = AsyncFederatedSimulator(fed, sim, hetero, x, y, xt, yt, parts)
+        tel = Telemetry(jsonl=sink, engine=f"async-{mode}") if sink else None
+        eng = AsyncFederatedSimulator(fed, sim, hetero, x, y, xt, yt, parts,
+                                      telemetry=tel)
         hist = eng.run()
-        results[mode] = hist
+        results[mode], engines[mode] = hist, eng
+        if tel is not None:
+            tel.emit_summary()
         # measured wire bytes from the round protocol's transport — the
-        # uplink rides the top-k+EF codec, the downlink is the (θ_t, m̄_t)
-        # broadcast each dispatch pays
+        # uplink rides the top-k+EF codec; the downlink is per-client
+        # unicast: each dispatch pays a chained-delta catch-up or (past
+        # the horizon) a full-θ resync, classified by the ReferenceStore
         print(f"{mode:>6} {hist[-1]['round']:>7} {hist[-1]['t']:>13.0f} "
               f"{hist[-1]['acc']:>10.3f} {eng.uplink_bytes/2**20:>7.1f} "
-              f"{eng.downlink_bytes/2**20:>8.1f}")
+              f"{eng.downlink_bytes/2**20:>8.1f} {int(eng.refs.catchups):>8} "
+              f"{int(eng.refs.resyncs):>7}")
+    print("\nper-client unicast downlink (semi-async run): stragglers fall "
+          "past the\nhorizon and pay full-θ resyncs; fast clients ride "
+          "cheap chained deltas")
+    refs = engines["semi"].refs
+    print(f"{'client':>7} {'catchups':>9} {'resyncs':>8} {'down MB':>8}")
+    for c in sorted(refs.client_bytes):
+        print(f"{c:>7} {refs.client_catchups.get(c, 0):>9} "
+              f"{refs.client_resyncs.get(c, 0):>8} "
+              f"{refs.client_bytes[c]/2**20:>8.1f}")
     print("\naccuracy vs virtual time (semi-async reaches any level sooner):")
     print(f"{'sync t':>8} {'acc':>8}    | {'semi t':>8} {'acc':>8}")
     from itertools import zip_longest
@@ -55,6 +89,9 @@ def main():
         left = f"{hs['t']:>8.0f} {hs['acc']:>8.3f}" if hs else " " * 17
         right = f"{ha['t']:>8.0f} {ha['acc']:>8.3f}" if ha else ""
         print(f"{left}    | {right}")
+    if sink is not None:
+        sink.close()
+        print(f"telemetry events written to {args.telemetry_jsonl}")
 
 
 if __name__ == "__main__":

@@ -344,6 +344,9 @@ RETRACE_MATRIX = (
     ("sync", {"compressor": "topk", "topk_frac": 0.5,
               "error_feedback": True, "sparse_uplink": True}),
     ("sync", {"downlink_compressor": "delta"}),
+    # stateful (lossy) downlink: the sync engine's broadcast runs through
+    # the ReferenceStore's jit'd bcast_fn — one trace, like the async one
+    ("sync", {"downlink_compressor": "delta+qsgd", "downlink_qsgd_bits": 8}),
     ("async", {}),
     ("async", {"downlink_compressor": "delta", "compressor": "qsgd",
                "qsgd_bits": 4}),
@@ -362,7 +365,11 @@ def audit_retrace(matrix: Sequence = RETRACE_MATRIX,
             if engine == "sync":
                 s = _build_sync(fed_kwargs)
                 s.run(rounds=2)
-                jit_fns = {"round_fn": s._round_fn}
+                # bcast_fn only traces for the stateful (lossy) downlink —
+                # a stateless config leaves its cache empty, which the ≤1
+                # check accepts
+                jit_fns = {"round_fn": s._round_fn,
+                           "bcast_fn": (s._bcast_fn, 1)}
                 path = "src/repro/federated/simulator.py"
             else:
                 s = _build_async(fed_kwargs)

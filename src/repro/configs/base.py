@@ -272,6 +272,18 @@ class FedConfig:
     # topk_frac / qsgd_bits when these are None
     downlink_topk_frac: Optional[float] = None
     downlink_qsgd_bits: Optional[int] = None
+    # per-client unicast downlink (repro.federated.reference): instead of
+    # the one-multicast-payload model, every dispatched client is charged
+    # individually against the version it last received — fresh clients
+    # cost 0 measured bytes, clients ≤ resync_horizon versions stale get
+    # the chained delta against THEIR version at steady-state delta bytes,
+    # and anything staler (or never seen) pays the full-θ resync.  Needs
+    # the lossless delta downlink family (the reconstruction must be exact
+    # θ_t for every staleness level so the in-jit program stays one tree;
+    # Transport validates).  Accounting/bookkeeping only: trajectories are
+    # bit-identical to multicast (CI engine-parity Unicast axis).
+    downlink_unicast: bool = False
+    resync_horizon: int = 4
     # two-tier fleet topology (repro.federated.fleet, DESIGN.md §Fleet):
     # 0 = flat aggregation (the server reduces all K deltas directly);
     # R >= 1 = hierarchical — the round's deltas chunk into R contiguous

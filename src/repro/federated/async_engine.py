@@ -90,7 +90,6 @@ class AsyncFederatedSimulator(FederatedSimulator):
                                         fed.local_steps)
         self._deltas_fn = jax.jit(self._make_deltas_fn())
         self._apply_fn = jax.jit(self._make_apply_fn())
-        self._bcast_fn = jax.jit(self._make_bcast_fn())
         self.version = 0              # number of server updates applied
         self.vtime = 0.0              # virtual clock
         # (kind, time, client, version) events; bounded so a long-lived
@@ -102,35 +101,16 @@ class AsyncFederatedSimulator(FederatedSimulator):
         # consecutive run() calls
         self.staleness_hist = self.telemetry.histogram("staleness")
         self._dispatch_ctr = 0        # compression PRNG stream, event order
-        # one broadcast per server version: every dispatch at version v
-        # hands out the same wire reconstruction (a broadcast is one
-        # multicast), and the delta codec's reference advances exactly once
-        # per version — stale clients therefore trained against the
-        # reference version they were dispatched with
-        self._bcast_cache = None      # (version, params_w, ctx_w)
 
     # ------------------------------------------------------------------
-    def _make_bcast_fn(self):
-        """(params, server_state, down_ref, key) -> (params_w, ctx_w,
-        new_ref): one server broadcast through the downlink codec.  Jit'd
-        separately from the dispatch groups so a version's broadcast is
-        computed once and every group at that version receives the same
-        wire reconstruction."""
-        protocol = self.protocol
-        down = protocol.transport.down
-        lossy_down = down is not None and down.lossy
-
-        def bcast_fn(params, server_state, down_ref, key):
-            dkey = key if lossy_down else None
-            return protocol.client_ctx(server_state, params, dkey, down_ref)
-
-        return bcast_fn
-
     def _broadcast(self):
-        """The version-v broadcast, computed once per server version and
-        cached until the next update: encodes against the reference state
-        R_{v−1} and advances it to the new reconstruction R_v."""
-        if self._bcast_cache is None or self._bcast_cache[0] != self.version:
+        """The version-v broadcast: one wire per server version, memoised
+        in the ``ReferenceStore`` (every dispatch at version v hands out
+        the same reconstruction; the lossy delta codec's reference
+        advances exactly once per version — stale clients trained against
+        the reference version they were dispatched with)."""
+
+        def compute(ref):
             key = jax.random.fold_in(
                 # explicit uint32 transfer of the version counter (a bare
                 # Python int would be an implicit H2D under transfer guard)
@@ -139,13 +119,12 @@ class AsyncFederatedSimulator(FederatedSimulator):
                 jnp.asarray(np.asarray(self.version, np.uint32)))
             with self.telemetry.tracer.span("transport.encode") as sp:
                 params_w, ctx, new_ref = self._bcast_fn(
-                    self.params, self.server_state, self._down_ref, key)
+                    self.params, self.server_state, ref, key)
                 if self.telemetry.enabled:
                     sp.sync = params_w
-            if self.transport.needs_downlink_ref:
-                self._down_ref = new_ref
-            self._bcast_cache = (self.version, params_w, ctx)
-        return self._bcast_cache[1], self._bcast_cache[2]
+            return params_w, ctx, new_ref
+
+        return self.refs.broadcast(self.version, compute)
 
     def _make_deltas_fn(self):
         """(params_w, ctx, xb, yb, counts, cstates, efs, keys) -> (stacked
@@ -283,12 +262,13 @@ class AsyncFederatedSimulator(FederatedSimulator):
             # per-client implicit sync in the loop below (host-sync-in-jit
             # hygiene: deltas stay on device, scalars cross once)
             losses = np.asarray(jax.device_get(losses))
-            # every dispatched client receives the (θ_t, ctx) broadcast —
+            # every dispatched client receives the version-v broadcast —
             # downlink bytes are paid at dispatch (dropped uploads lose the
-            # uplink only), and version 0's broadcast is the full initial
-            # sync under the delta codec
-            self.transport.account_downlink(len(group),
-                                            resync=(self.version == 0))
+            # uplink only).  Multicast: version 0's broadcast is the full
+            # initial sync under the delta codec.  Unicast: per-client
+            # fresh/catch-up/resync classification against the last version
+            # each client actually saw.
+            self.refs.dispatch(group, self.version, wire=(params_w, ctx))
             for j, c in enumerate(group):
                 rec = _InFlight(
                     client=c, version=self.version,

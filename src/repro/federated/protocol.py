@@ -26,6 +26,7 @@ from typing import Callable, Optional
 
 from repro.core.strategies import get_strategy
 from repro.federated import aggregation as A
+from repro.federated.reference import ReferenceStore
 from repro.federated.store import ClientStore
 from repro.federated.transport import Transport
 
@@ -52,6 +53,13 @@ class RoundProtocol:
             counters = telemetry.counters if telemetry is not None else None
             self.transport = Transport(fed, counters=counters)
         self.store = store if store is not None else ClientStore()
+        # the unified downlink reference layer (DESIGN.md §Transport): one
+        # ReferenceStore per engine owns the broadcast reference, the
+        # one-wire-per-version memo, and the per-client unicast bookkeeping
+        # — per-client reference pages ride this protocol's client store,
+        # so a paged backend spills them through its LRU/zlib tier
+        self.refs = ReferenceStore(fed, self.transport, store=self.store,
+                                   telemetry=telemetry)
         # two-tier fleet topology: aggregate() routes through the regional/
         # global reduce instead of the flat one (fleet.hierarchy; lazy
         # import — repro.federated.fleet composes on top of this module)

@@ -1,0 +1,214 @@
+"""Unified downlink reference layer (DESIGN.md §Transport).
+
+Before this module the repo carried **three** disjoint downlink reference
+mechanisms: the simulator threaded the delta codec's reference through its
+jit'd ``round_fn`` signature, the async engine kept a version-keyed
+broadcast cache next to its own copy of the reference, and the pod engine
+stored a third copy inside the sharded train state — three code paths for
+one fact ("what tree do the clients currently hold").  ``ReferenceStore``
+owns that fact behind one interface, and every engine drives it
+identically:
+
+* **global multicast reference** (today's model) — ``broadcast(version,
+  compute)`` memoises one wire reconstruction per server version (the old
+  async cache, now shared by every engine) and advances the codec
+  reference exactly once per version.  The reference itself is held only
+  for the *lossy* delta family (``Transport.stateful_downlink``): the
+  lossless configuration reconstructs θ_t bit-exactly regardless of
+  reference, so it carries none — which is also what lets the pod engine
+  drop the unread reference copy from its train state.
+* **per-client unicast backend** (``FedConfig.downlink_unicast``) —
+  ``dispatch`` tracks each client's last-received version and classifies
+  every dispatch: *fresh* (client already holds this version, 0 measured
+  bytes), *catch-up* (staleness ≤ ``FedConfig.resync_horizon``: the chained
+  delta against *their* version, steady-state delta bytes), or *resync*
+  (past the horizon or never seen: the full-θ payload).  Accounting
+  switches from one-multicast-payload to per-dispatched-client unicast
+  bytes (``Transport.account_unicast``) in both the measured and raw
+  counters, plus ``downlink.catchups`` / ``downlink.resyncs`` counters and
+  a per-dispatch payload histogram.  When a client store is attached, each
+  dispatched client's wire lands in a ``"downlink_ref"`` store namespace —
+  under a ``PagedClientStore`` the per-client references therefore spill
+  through the LRU/zlib tier instead of growing host memory with the fleet.
+
+The per-client bookkeeping is bounded by construction: every mapping is
+keyed by client id and written by plain item assignment, so a long-lived
+engine holds O(clients) host state (the dynamic counterpart of the
+``unbounded-host-accumulator`` analysis rule, pinned in tests), and the
+wire memo is a single slot — the old per-engine caches never return.
+
+Unicast is restricted to the *lossless* delta family: a per-client lossy
+reconstruction would need one broadcast tree per staleness level, while the
+lossless codec hands every client bit-exact θ_t regardless of their
+reference — only the bookkeeping and the bytes are per-client, so the
+in-jit program stays a single tree (``Transport`` validates this).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# the store namespace per-client reference pages live in (one page per
+# dispatched client: the (params_w, ctx_w) wire that client last received)
+REF_NAMESPACE = "downlink_ref"
+
+
+class ReferenceStore:
+    """All downlink reference state behind one interface (engine-local,
+    host-side; the jit'd broadcast functions stay pure and take the
+    reference as an explicit argument)."""
+
+    def __init__(self, fed, transport, store=None, telemetry=None):
+        self.fed = fed
+        self.transport = transport
+        self.store = store
+        self.unicast = bool(fed.downlink_unicast)
+        self.horizon = int(fed.resync_horizon)
+        # the codec reference R_v = the previous broadcast reconstruction;
+        # held only for the lossy delta family (stateful_downlink) — the
+        # lossless configuration drops it entirely
+        self._ref = None
+        # single-slot wire memo: one broadcast per server version (the old
+        # async per-version cache, generalised to every engine)
+        self._wire_version: Optional[int] = None
+        self._wire = None
+        # per-client bookkeeping, written by plain item assignment only and
+        # keyed by client id — bounded at O(clients) by construction
+        self._client_version: Dict[int, int] = {}
+        self.client_bytes: Dict[int, int] = {}
+        self.client_catchups: Dict[int, int] = {}
+        self.client_resyncs: Dict[int, int] = {}
+        self._registered = False
+        self._page_specs = None
+        if telemetry is not None:
+            self._kb_hist = telemetry.histogram("downlink.client_kb")
+        else:
+            from repro.telemetry import Histogram
+            self._kb_hist = Histogram(n_bins=32)
+
+    @property
+    def counters(self):
+        return self.transport.counters
+
+    @property
+    def catchups(self) -> int:
+        return self.counters.get("downlink.catchups")
+
+    @property
+    def resyncs(self) -> int:
+        return self.counters.get("downlink.resyncs")
+
+    # --- the codec reference -------------------------------------------
+    def seed(self, ref) -> None:
+        """Install the round-0 reference (the out-of-band initial sync the
+        clients start from).  Dropped unless the downlink reconstruction
+        genuinely depends on it (the lossy delta family) — the lossless
+        codec never reads the reference, so none is held."""
+        self._ref = ref if self.transport.stateful_downlink else None
+
+    def reference(self):
+        """The reference the next broadcast encodes against (None when the
+        codec is stateless or lossless)."""
+        return self._ref
+
+    def advance(self, version: int, wire, new_ref) -> None:
+        """Record version `version`'s wire in the memo and advance the
+        codec reference to the new reconstruction."""
+        self._wire_version = version
+        self._wire = wire
+        if self.transport.stateful_downlink:
+            self._ref = new_ref
+
+    # --- the broadcast memo --------------------------------------------
+    def broadcast(self, version: int, compute):
+        """The version-`version` broadcast wire, computed at most once per
+        server version: `compute(ref) -> (params_w, ctx_w, new_ref)` runs
+        only on a memo miss, the reference advances exactly once per
+        version, and every dispatch at that version receives the same wire
+        reconstruction.  -> (params_w, ctx_w)."""
+        if self._wire_version != version:
+            params_w, ctx_w, new_ref = compute(self._ref)
+            self.advance(version, (params_w, ctx_w), new_ref)
+        return self._wire
+
+    # --- dispatch accounting + per-client bookkeeping -------------------
+    def dispatch(self, clients, version: int, wire=None) -> None:
+        """Account one dispatch wave at server version `version`.
+
+        Multicast mode reproduces the historical accounting exactly: every
+        dispatched client pays the steady-state payload, with version 0
+        charged as the delta codec's full initial sync.  Unicast mode
+        classifies each client against their last-received version
+        (fresh / catch-up / full resync), charges per-client bytes, and —
+        when a store is attached and the wave's `wire` is given — writes
+        the wire into that client's reference page."""
+        clients = [int(c) for c in clients]
+        if not self.unicast:
+            self.transport.account_downlink(len(clients),
+                                            resync=(version == 0))
+            return
+        t = self.transport
+        n_fresh = n_catchup = n_resync = 0
+        for c in clients:
+            last = self._client_version.get(c)
+            if last is None or version - last > self.horizon:
+                # never seen, or past the horizon: full-θ resync
+                n_resync += 1
+                nbytes = t._down_raw
+                self.client_resyncs[c] = self.client_resyncs.get(c, 0) + 1
+            elif version == last:
+                # already holds this version: nothing to ship
+                n_fresh += 1
+                nbytes = 0
+            else:
+                # 1 ≤ staleness ≤ horizon: the chained delta against THEIR
+                # version — the lossless dense delta costs steady-state
+                # bytes regardless of how many versions it spans
+                n_catchup += 1
+                nbytes = t._down_nbytes
+                self.client_catchups[c] = self.client_catchups.get(c, 0) + 1
+            self._client_version[c] = version
+            self.client_bytes[c] = self.client_bytes.get(c, 0) + nbytes
+            self._kb_hist.observe(nbytes // 1024)
+        t.account_unicast(n_fresh, n_catchup, n_resync)
+        self.counters.inc("downlink.catchups", n_catchup)
+        self.counters.inc("downlink.resyncs", n_resync)
+        if wire is not None and self.store is not None:
+            self._write_pages(clients, wire)
+
+    def client_staleness(self, client, version: int) -> Optional[int]:
+        """`version` minus the client's last-received version (None when
+        the client has never been dispatched)."""
+        last = self._client_version.get(int(client))
+        return None if last is None else version - last
+
+    # --- per-client reference pages --------------------------------------
+    def _write_pages(self, clients, wire) -> None:
+        if not self._registered:
+            # the store's lazy-init contract needs a REAL zeros builder
+            # (a paged backend materialises the template to size empty
+            # slots), so capture the wire's specs on first write
+            self._page_specs = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), wire)
+            specs = self._page_specs
+            self.store.register(
+                REF_NAMESPACE,
+                lambda: jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                     specs))
+            self._registered = True
+        view = self.store.states(REF_NAMESPACE)
+        for c in clients:
+            view[c] = wire
+
+    def client_reference(self, client):
+        """The reference page one client holds (the wire it last received),
+        or None before its first dispatch.  A single-pick gather: a paged
+        backend faults a spilled page back in through its zlib tier."""
+        if self.store is None or not self._registered:
+            return None
+        if int(client) not in self.store.states(REF_NAMESPACE):
+            return None
+        stacked = self.store.gather(REF_NAMESPACE, [int(client)])
+        return jax.tree.map(lambda x: x[0], stacked)

@@ -115,14 +115,23 @@ class FederatedSimulator:
             lambda ss, p: self.strategy.client_setup(ss, p, fed),
             self.server_state, self.params)
         self.transport.set_wire_templates(self.params, (self.params, ctx_t))
-        # delta downlink codec: the broadcast reference state (θ, ctx) the
-        # clients hold, threaded functionally through the jit'd round; the
-        # round-0 reference is the out-of-band initial sync, so the first
-        # wire delta is exactly zero (None for stateless codecs)
-        self._down_ref = self.protocol.init_downlink_ref(self.server_state,
-                                                         self.params)
+        # the unified downlink reference layer (repro.federated.reference):
+        # ONE ReferenceStore owns the delta codec's broadcast reference,
+        # the one-wire-per-version memo, and the per-client unicast
+        # bookkeeping for every engine.  The round-0 reference is the
+        # out-of-band initial sync, so the first wire delta is exactly
+        # zero (held only for the lossy delta family — the lossless
+        # reconstruction never reads it)
+        self.refs = self.protocol.refs
+        self.refs.seed(self.protocol.init_downlink_ref(self.server_state,
+                                                       self.params))
         self._rounds_done = 0
         self._round_fn = jax.jit(self._make_round_fn())
+        # one server broadcast through the downlink codec, jit'd separately
+        # from the round body so the ReferenceStore computes each version's
+        # wire exactly once (used by the delta family here; the async
+        # engine routes every codec through it)
+        self._bcast_fn = jax.jit(self._make_bcast_fn())
         self._eval_fn = jax.jit(self._make_eval_fn())
 
     @property
@@ -265,6 +274,23 @@ class FederatedSimulator:
 
         return client_update
 
+    def _make_bcast_fn(self):
+        """(params, server_state, down_ref, key) -> (params_w, ctx_w,
+        new_ref): one server broadcast through the downlink codec.  Jit'd
+        separately from the round body so a version's broadcast is computed
+        once (the ReferenceStore memoises the wire per version) and every
+        dispatch at that version receives the same reconstruction.
+        Callers pre-fold the per-round key; lossless codecs ignore it."""
+        protocol = self.protocol
+        down = protocol.transport.down
+        lossy_down = down is not None and down.lossy
+
+        def bcast_fn(params, server_state, down_ref, key):
+            dkey = key if lossy_down else None
+            return protocol.client_ctx(server_state, params, dkey, down_ref)
+
+        return bcast_fn
+
     def _make_round_fn(self):
         strategy, fed = self.strategy, self.fed
         protocol = self.protocol
@@ -281,13 +307,19 @@ class FederatedSimulator:
         ef_metrics = self.ef_enabled
 
         def round_fn(params, server_state, xb, yb, counts, cstates,
-                     n_examples, efs, key, down_ref):
+                     n_examples, efs, key, bcast):
             # downlink: clients train on the broadcast wire reconstruction
             # (bit-identical passthrough for none/identity/delta+identity
-            # codecs); `down_ref` is the delta codec's reference state
-            dkey = jax.random.fold_in(key, 0xD0) if lossy_down else None
-            params_w, ctx, new_ref = protocol.client_ctx(server_state, params,
-                                                         dkey, down_ref)
+            # codecs).  `bcast` is the externally computed (params_w, ctx)
+            # wire for the reference-coded delta family (ReferenceStore →
+            # _bcast_fn, one broadcast per version); stateless codecs
+            # compute it inline — a static Python branch, one trace each.
+            if bcast is None:
+                dkey = jax.random.fold_in(key, 0xD0) if lossy_down else None
+                params_w, ctx, _ = protocol.client_ctx(server_state, params,
+                                                       dkey, None)
+            else:
+                params_w, ctx = bcast
             deltas, ncs, losses, theta_Hs = jax.vmap(
                 lambda x, y, c, cs: client_update(params_w, ctx, x, y, c, cs)
             )(xb, yb, counts, cstates)
@@ -336,7 +368,7 @@ class FederatedSimulator:
                               if has_momentum else None),
                     efs=new_efs if ef_metrics else None)
             return (new_params, new_ss, ncs, new_efs, jnp.mean(losses),
-                    new_ref, metrics)
+                    metrics)
 
         return round_fn
 
@@ -394,17 +426,36 @@ class FederatedSimulator:
             n_examples = jnp.asarray(np.asarray(
                 [len(self.parts[int(c)]) for c in picks], np.float32))
             efs = self._get_ef_states(picks)
+            # explicit uint32 transfer of the round counter — a bare
+            # Python int would be an implicit H2D (transfer guard)
+            round_key = jax.random.fold_in(
+                self._comp_key, jnp.asarray(np.asarray(t, np.uint32)))
+            def compute_bcast(ref):
+                # the key folds match the fused in-round derivation
+                # bitwise (fold_in is deterministic eager or traced)
+                return self._bcast_fn(
+                    self.params, self.server_state, ref,
+                    jax.random.fold_in(
+                        round_key, jnp.asarray(np.asarray(0xD0, np.uint32))))
+            bcast = None
+            if self.transport.stateful_downlink:
+                # lossy delta family: the broadcast is computed through the
+                # ReferenceStore (one wire per version, the reference
+                # advances exactly once) and handed into the round body
+                bcast = self.refs.broadcast(self._rounds_done, compute_bcast)
+            wire = bcast
+            if wire is None and self.refs.unicast:
+                # lossless delta stays *inline* in the round body (the
+                # fused graph is bit-identical to the identity downlink's,
+                # which the materialised jit-boundary broadcast is not) —
+                # the unicast layer still materialises the wire once per
+                # round so per-client reference pages hold real bytes
+                wire = self.refs.broadcast(self._rounds_done, compute_bcast)
             with tel.tracer.span("round") as sp:
                 (self.params, self.server_state, ncs, nefs, loss,
-                 new_ref, metrics) = self._round_fn(
+                 metrics) = self._round_fn(
                     self.params, self.server_state, xb, yb, counts, cstates,
-                    n_examples, efs,
-                    # explicit uint32 transfer of the round counter — a bare
-                    # Python int would be an implicit H2D (transfer guard)
-                    jax.random.fold_in(
-                        self._comp_key,
-                        jnp.asarray(np.asarray(t, np.uint32))),
-                    self._down_ref)
+                    n_examples, efs, round_key, bcast)
                 if tel.enabled:
                     # span stops after the round's device work, not after
                     # the async dispatch that launched it
@@ -413,11 +464,9 @@ class FederatedSimulator:
                 self._put_client_states(picks, ncs)
             if self.ef_enabled:
                 self._put_ef_states(picks, nefs)
-            if self.transport.needs_downlink_ref:
-                self._down_ref = new_ref
-            # the delta codec's first broadcast is the full initial sync
-            self.transport.account_downlink(
-                len(picks), resync=(self._rounds_done == 0))
+            # downlink accounting + per-client unicast bookkeeping (the
+            # delta codec's first broadcast is the full initial sync)
+            self.refs.dispatch(picks, self._rounds_done, wire=wire)
             self._rounds_done += 1
             self.transport.account_uplink(len(picks))
             if tel.enabled:

@@ -194,11 +194,15 @@ class DeltaDownlinkCodec(Codec):
     which is what drives FedADC's measured downlink from 2× raw θ to ~1×.
     Otherwise the ctx delta rides the inner codec like the params.
 
-    Engines thread ``ref`` functionally (simulator round state, async
-    per-version cache, pod ``state["downlink_ref"]``); the codec itself
-    holds no arrays, so one instance serves jit retraces.  The round-0
-    reference is the out-of-band initial sync (θ_0, ctx_0) — engines
-    account it as one raw broadcast (``account_downlink(resync=True)``).
+    The codec is **stateless**: it holds no arrays and ``ref`` is threaded
+    in functionally.  All reference *state* lives in one place — the
+    ``repro.federated.reference.ReferenceStore`` every engine drives (the
+    lossy pod configuration additionally carries the tree inside its train
+    state so it rides the mesh).  Only the lossy family needs a reference
+    at all (``Transport.stateful_downlink``); the lossless configuration
+    accepts ``ref=None``.  The round-0 reference is the out-of-band
+    initial sync (θ_0, ctx_0) — accounted as one raw broadcast per client
+    dispatched at version 0 (``ReferenceStore.dispatch``).
     """
     lossy = True          # overwritten from the inner codec
 
@@ -312,6 +316,21 @@ class Transport:
         self.fed = fed
         self.up = make_codec(fed.compressor, fed, "uplink")
         self.down = make_codec(fed.downlink_compressor, fed, "downlink")
+        if fed.downlink_unicast:
+            # unicast catch-up ships each client the chained delta against
+            # THEIR version; only the lossless delta family reconstructs
+            # exact θ_t for every staleness level, so the in-jit program
+            # stays a single broadcast tree (a lossy per-client
+            # reconstruction would need one tree per staleness level)
+            if not (isinstance(self.down, DeltaDownlinkCodec)
+                    and not self.down.lossy):
+                raise ValueError(
+                    f"downlink_unicast needs the lossless delta downlink "
+                    f"(downlink_compressor='delta' / 'delta+identity'); "
+                    f"got {fed.downlink_compressor!r}")
+            if fed.resync_horizon < 0:
+                raise ValueError(
+                    f"resync_horizon must be >= 0, got {fed.resync_horizon}")
         self.ef_enabled = (self.up is not None and self.up.lossy
                           and fed.error_feedback)
         # byte totals live in a telemetry Counters registry (shared with
@@ -355,9 +374,20 @@ class Transport:
 
     @property
     def needs_downlink_ref(self) -> bool:
-        """True for the reference-coded (delta) downlink: engines must
-        thread the broadcast reference state through their round loop."""
+        """True for the reference-coded (delta) downlink: the broadcast is
+        encoded against a reference and the byte accounting distinguishes
+        delta payloads from full-θ resyncs."""
         return isinstance(self.down, DeltaDownlinkCodec)
+
+    @property
+    def stateful_downlink(self) -> bool:
+        """True when the downlink reconstruction genuinely DEPENDS on the
+        reference (the lossy delta family): engines must thread the
+        reference tree through jit.  The lossless delta configuration
+        reconstructs exact θ_t regardless of reference, so it carries no
+        reference state at all (the pod train state drops the copy, the
+        ReferenceStore holds None)."""
+        return self.needs_downlink_ref and self.down.lossy
 
     def init_downlink_ref(self, params, ctx):
         """The round-0 reference (the out-of-band initial sync), or None
@@ -379,11 +409,14 @@ class Transport:
             raise ValueError("a lossy downlink codec needs a per-round PRNG "
                              "key; pass key= to broadcast()/client_ctx()")
         if self.needs_downlink_ref:
-            if ref is None:
+            # only the LOSSY delta reconstruction depends on the reference;
+            # the lossless configuration never reads it, and ref=None is
+            # the supported "reference dropped" form (stateful_downlink)
+            if self.down.lossy and ref is None:
                 raise ValueError(
-                    "the delta downlink codec is stateful: pass ref= (see "
-                    "Transport.init_downlink_ref) and thread the returned "
-                    "reference into the next round")
+                    "the lossy delta downlink codec is stateful: pass ref= "
+                    "(see Transport.init_downlink_ref) and thread the "
+                    "returned reference into the next round")
             return self.down.broadcast(params, ctx, ref, key)
         if self.down is None or not self.down.lossy:
             return params, ctx, None
@@ -438,6 +471,22 @@ class Transport:
         self.counters.inc("transport.downlink_bytes", n_clients * nbytes)
         self.counters.inc("transport.downlink_bytes_raw",
                           n_clients * self._down_raw)
+
+    def account_unicast(self, n_fresh: int, n_catchup: int, n_resync: int):
+        """Per-dispatched-client unicast downlink accounting (the
+        ReferenceStore's classification): fresh clients already hold the
+        current version (0 measured bytes), catch-up clients receive the
+        chained delta against their version (steady-state delta bytes),
+        resync clients get the full-θ payload.  The raw baseline charges
+        every dispatched client one full broadcast, exactly like the
+        multicast model — under full participation the two accountings
+        coincide by construction."""
+        measured = (n_catchup * self._down_nbytes
+                    + n_resync * self._down_raw)
+        n = n_fresh + n_catchup + n_resync
+        self.counters.inc("transport.downlink_bytes", measured)
+        self.counters.inc("transport.downlink_bytes_raw",
+                          n * self._down_raw)
 
     # template-free probes (benchmarks, shims)
     def uplink_wire_nbytes(self, template) -> int:

@@ -153,10 +153,10 @@ def state_inputs(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         c_sh = S.param_shardings(st["clients"], mesh, mode=mode,
                                  fsdp_over_pod=fsdp_over_pod, tp_off=tp_off)
         out["clients"] = jax.tree.map(attach, st["clients"], c_sh)
-    if "downlink_ref" in st:
-        # delta downlink codec reference (θ, ctx): every leaf mirrors a
-        # parameter, so it shards exactly like the parameter tree
-        r_sh = S.param_shardings(st["downlink_ref"], mesh, mode=mode,
+    if "refs" in st:
+        # lossy delta downlink codec reference (θ, ctx): every leaf mirrors
+        # a parameter, so it shards exactly like the parameter tree
+        r_sh = S.param_shardings(st["refs"], mesh, mode=mode,
                                  fsdp_over_pod=fsdp_over_pod, tp_off=tp_off)
-        out["downlink_ref"] = jax.tree.map(attach, st["downlink_ref"], r_sh)
+        out["refs"] = jax.tree.map(attach, st["refs"], r_sh)
     return out

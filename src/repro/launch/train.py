@@ -29,10 +29,11 @@ H = fed.local_steps.  When the EF store is active, batch["client_ids"]
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FedConfig, ModelConfig, RunConfig
 from repro.core import distillation as D
@@ -41,6 +42,7 @@ from repro.core.strategies import get_strategy
 from repro.federated import aggregation as A
 from repro.federated import store as CS
 from repro.federated.fleet import hierarchy as FH
+from repro.federated.reference import ReferenceStore
 from repro.federated.transport import Transport
 from repro.models.registry import get_model
 from repro.telemetry import drift as drift_metrics
@@ -88,13 +90,16 @@ def init_state(rng, mcfg: ModelConfig, fed: FedConfig, run: RunConfig):
         # matches the wire the residual is the complement of
         ef_template = T.cast(params, _wire_dtype(run))
         state["clients"] = {"ef": CS.sharded_init(ef_template, fed.n_clients)}
-    if transport.needs_downlink_ref:
-        # the delta codec's broadcast reference lives in the train state
-        # (sharded like the parameters it mirrors) so it survives jit and
-        # rides the pod mesh; the round-0 reference is the initial sync
+    if transport.stateful_downlink:
+        # only the *lossy* delta codec is stateful: its broadcast reference
+        # lives in the train state (sharded like the parameters it mirrors)
+        # so it survives jit and rides the pod mesh; the round-0 reference
+        # is the initial sync.  The lossless delta downlink derives its
+        # reference from θ_t itself, so the train state carries none.
         theta_w, _, ctx0, _ = _broadcast_inputs(strategy, params,
                                                 state["server"], fed, run)
-        state["downlink_ref"] = transport.init_downlink_ref(theta_w, ctx0)
+        state["refs"] = {
+            "downlink": transport.init_downlink_ref(theta_w, ctx0)}
     return state
 
 
@@ -287,11 +292,14 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         new_dref = None
         if transport.down is not None:
             # clients everywhere train on the broadcast reconstruction;
-            # the delta codec's reference state rides the train state
+            # only the lossy delta codec keeps reference state, and it
+            # rides state["refs"] ("refs" membership is a static Python
+            # fact — the lossless config traces the ref-free graph)
             dkey = jax.random.fold_in(round_key, 0xD0) if lossy_down \
                 else None
+            dref = state["refs"]["downlink"] if "refs" in state else None
             theta_t, ctx, new_dref = transport.broadcast(
-                theta_t, ctx, dkey, state.get("downlink_ref"))
+                theta_t, ctx, dkey, dref)
         if ef_enabled:
             if client_ids is None:
                 # default identification: slot i of the round is client i
@@ -351,8 +359,8 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
             state["server"], theta_master, mean_delta, fed)
         new_state = {"params": new_params, "server": new_server,
                      "round": state["round"] + 1}
-        if transport.needs_downlink_ref:
-            new_state["downlink_ref"] = new_dref
+        if "refs" in state:
+            new_state["refs"] = {"downlink": new_dref}
         if ef_enabled:
             flat_new = jax.tree.map(
                 lambda x: x.reshape((-1,) + x.shape[2:]), new_efs)
@@ -389,15 +397,31 @@ def make_train_step(mcfg: ModelConfig, fed: FedConfig, run: RunConfig,
         state_t["params"], state_t["server"])
     transport.set_wire_templates(theta_w_t, (theta_w_t, ctx_t))
 
-    def account_round(n_clients: int, resync: bool = False):
-        """Advance the measured-byte counters by one round's traffic for
-        `n_clients` dispatched clients.  Host-side by design: callers jit
-        train_step themselves, so the counters cannot advance inside it —
-        call once per executed round (resync=True for the delta downlink's
-        round-0 initial sync)."""
+    # the pod engine's downlink reference layer: multicast accounting and
+    # (when fed.downlink_unicast) per-client catch-up/resync bookkeeping —
+    # host-side by design, mirroring the counters
+    refs = ReferenceStore(fed, transport, telemetry=telemetry)
+
+    def account_round(n_clients: Optional[int] = None, resync: bool = False,
+                      client_ids=None):
+        """Advance the measured-byte counters by one round's traffic.
+        Host-side by design: callers jit train_step themselves, so the
+        counters cannot advance inside it — call once per executed round.
+        Multicast (default): `n_clients` dispatched clients, resync=True
+        for the delta downlink's round-0 initial sync.  Unicast
+        (fed.downlink_unicast): pass `client_ids` and each client is
+        classified fresh/catch-up/resync against the last round it saw."""
+        if client_ids is not None:
+            ids = [int(c) for c in np.asarray(client_ids).reshape(-1)]
+            refs.dispatch(ids, account_round.round_no)
+            account_round.round_no += 1
+            transport.account_uplink(len(ids))
+            return
         transport.account_downlink(n_clients, resync=resync)
         transport.account_uplink(n_clients)
 
+    account_round.round_no = 0
     train_step.transport = transport
+    train_step.refs = refs
     train_step.account_round = account_round
     return train_step

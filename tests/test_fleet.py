@@ -298,6 +298,84 @@ class TestPagedStore:
 
 
 # ---------------------------------------------------------------------------
+# per-client downlink reference pages through the paged tier: the unicast
+# ReferenceStore parks each dispatched client's wire in the store's
+# "downlink_ref" namespace, so at fleet scale the pages spill through the
+# LRU/zlib bit-view tier and must reload the exact downlink
+# ---------------------------------------------------------------------------
+class TestReferencePages:
+    def _refs(self, wire, budget_pages=1, **fed_kw):
+        from repro.federated.reference import ReferenceStore
+        from repro.federated.transport import Transport
+        fed = FedConfig(strategy="fedadc", downlink_compressor="delta",
+                        downlink_unicast=True, **fed_kw)
+        t = Transport(fed, counters=Counters())
+        t.set_wire_templates(wire[0], wire)
+        store = PagedClientStore(budget_bytes=budget_pages * page_nbytes(wire),
+                                 counters=t.counters)
+        return ReferenceStore(fed, t, store=store), store
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16",
+                                       "float8_e4m3fn"])
+    def test_spilled_reference_reloads_downlink_bitwise(self, dtype):
+        dt = jnp.dtype(dtype)
+        rng = np.random.RandomState(0)
+        wire = ({"w": jnp.asarray(rng.randn(16), jnp.float32).astype(dt)},
+                {"m_bar": jnp.asarray(rng.randn(16),
+                                      jnp.float32).astype(dt)})
+        # negative zero: a value a float round-trip would normalise away
+        wire[0]["w"] = wire[0]["w"].at[0].set(jnp.asarray(-0.0, dt))
+        refs, store = self._refs(wire, budget_pages=1)
+        refs.dispatch([0, 1, 2], 0, wire=wire)
+        assert store.spilled_pages == 2, "budget must force the zlib tier"
+        for c in (0, 1, 2):
+            _bits_equal(refs.client_reference(c), wire)
+
+    def test_newer_reference_supersedes_evicted_page(self):
+        rng = np.random.RandomState(1)
+        w0 = ({"w": jnp.asarray(rng.randn(16), jnp.float32)},
+              {"m_bar": jnp.asarray(rng.randn(16), jnp.float32)})
+        w1 = jax.tree.map(lambda x: x * 2.0, w0)
+        refs, store = self._refs(w0, budget_pages=1)
+        refs.dispatch([0, 1], 0, wire=w0)       # client 0's page spills
+        assert store.spilled_pages == 1
+        refs.dispatch([0], 1, wire=w1)          # newer wire over the spill
+        _bits_equal(refs.client_reference(0), w1)
+        _bits_equal(refs.client_reference(1), w0)
+        # exactly one live version per page — the stale spill copy is gone
+        assert store.resident_pages + store.spilled_pages == 2
+        assert refs.client_staleness(0, 1) == 0
+        assert refs.client_staleness(1, 1) == 1
+
+    def test_simulator_pages_ride_paged_store_bitwise(self, small_data):
+        """End to end: a unicast simulator over a one-page-budget paged
+        store thrashes every reference page through the spill tier and
+        still re-serves each client's exact last downlink; the trajectory
+        is bit-identical to the host-store run."""
+        x, y, xt, yt, parts = small_data
+        fed = FedConfig(strategy="fedadc", n_clients=10, clients_per_round=3,
+                        local_steps=2, downlink_compressor="delta",
+                        downlink_unicast=True)
+        sim = SimConfig(model="cnn", n_classes=10, batch_size=8, rounds=3,
+                        eval_every=3, cnn_width=8, seed=0)
+        host = FederatedSimulator(fed, sim, x, y, xt, yt, parts,
+                                  store=ClientStore())
+        host.run()
+        wire_bytes = page_nbytes(jax.device_get(host.refs._wire))
+        paged_store = PagedClientStore(budget_bytes=wire_bytes,
+                                       counters=Counters())
+        paged = FederatedSimulator(fed, sim, x, y, xt, yt, parts,
+                                   store=paged_store)
+        paged.run()
+        _bits_equal(host.params, paged.params)
+        assert paged_store.counters.snapshot()["store.spills"] > 0
+        for c, v in paged.refs._client_version.items():
+            if v == paged._rounds_done - 1:
+                _bits_equal(paged.refs.client_reference(c),
+                            paged.refs._wire)
+
+
+# ---------------------------------------------------------------------------
 # fleet scheduler
 # ---------------------------------------------------------------------------
 class TestFleetScheduler:

@@ -313,11 +313,12 @@ class TestDeltaTransportAsync:
             v = eng.version
             got = jax.tree.map(np.asarray, pw)
             if v in rec:
-                # cached: every dispatch at version v gets the same wire
+                # memoised: every dispatch at version v gets the same wire
                 _assert_trees_equal(rec[v]["pw"], got, exact=True)
             else:
                 rec[v] = {"pw": got, "params": params_now,
-                          "ref": jax.tree.map(np.asarray, eng._down_ref[0])}
+                          "ref": jax.tree.map(np.asarray,
+                                              eng.refs.reference()[0])}
             return pw, cx
 
         eng._broadcast = spy
@@ -357,7 +358,10 @@ class TestDeltaTransportPod:
         with mesh:
             sa = init_state(jax.random.PRNGKey(0), mcfg, fed_plain, run)
             sd = init_state(jax.random.PRNGKey(0), mcfg, fed_delta, run)
-            assert "downlink_ref" in sd and "downlink_ref" not in sa
+            # the lossless delta downlink is stateless: NEITHER train state
+            # carries a broadcast reference (the codec derives it from θ_t)
+            for key in ("refs", "downlink_ref"):
+                assert key not in sd and key not in sa
             step_a = make_train_step(mcfg, fed_plain, run)
             step_d = make_train_step(mcfg, fed_delta, run)
             # two rounds: the reference must thread through the train state
@@ -379,18 +383,42 @@ class TestDeltaTransportPod:
             assert np.isfinite(float(jax.device_get(m["loss"])))
 
     def test_pod_ref_tracks_broadcast(self):
-        """After round t the stored reference is the round-t broadcast
-        (θ at broadcast time), i.e. the tree the clients now hold."""
-        from repro.launch.train import init_state, make_train_step
+        """Lossy delta: after round t, state["refs"]["downlink"] is the
+        round-t broadcast *reconstruction* — the tree the clients now hold.
+        Round 1's delta against the initial-sync reference is exactly zero,
+        so its reconstruction is θ_0 bitwise; round 2's is genuinely lossy
+        and matches an eager replication of the codec."""
+        from repro.launch.train import (init_state, make_train_step,
+                                        _broadcast_inputs)
+        from repro.core.strategies import get_strategy
         mesh, mcfg, run, batch, fed = self._setup(
-            downlink_compressor="delta")
+            downlink_compressor="delta+topk", downlink_topk_frac=0.1)
         with mesh:
             s0 = init_state(jax.random.PRNGKey(0), mcfg, fed, run)
+            assert "refs" in s0 and "downlink_ref" not in s0
             step = make_train_step(mcfg, fed, run)
             s1, _ = step(s0, batch)
-            s2, _ = step(s1, batch)
-            _assert_trees_equal(s2["downlink_ref"][0], s1["params"],
+            # round-0 delta is exact: the reference IS θ_0
+            _assert_trees_equal(s1["refs"]["downlink"][0], s0["params"],
                                 exact=True)
+            s2, _ = step(s1, batch)
+            # eager replication of round 2's broadcast against R_1
+            strategy = get_strategy(fed.strategy)
+            theta_t, _, ctx, _ = _broadcast_inputs(
+                strategy, s1["params"], s1["server"], fed, run)
+            dkey = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(run.seed),
+                                   s1["round"]), 0xD0)
+            _, _, ref2 = step.transport.broadcast(
+                theta_t, ctx, dkey, s1["refs"]["downlink"])
+            _assert_trees_equal(s2["refs"]["downlink"][0], ref2[0],
+                                exact=False, atol=1e-6)
+            # ... and the reconstruction is genuinely lossy, not θ_1
+            diff = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                       for a, b in zip(
+                           jax.tree.leaves(s2["refs"]["downlink"][0]),
+                           jax.tree.leaves(s1["params"])))
+            assert diff > 0
 
     def test_pod_delta_ref_lowers_through_dryrun_inputs(self):
         """state_inputs grows the sharded reference and the jit'd round
@@ -410,17 +438,216 @@ class TestDeltaTransportPod:
         mesh = make_host_mesh()
         with mesh:
             state_sds = I.state_inputs(mcfg, fed, run, mesh)
-            assert "downlink_ref" in state_sds
+            assert "refs" in state_sds and "downlink_ref" not in state_sds
             batch_sds = I.train_inputs(mcfg, shape, fed, mesh, False)
             step = make_train_step(mcfg, fed, run)
             compiled = jax.jit(step).lower(state_sds, batch_sds).compile()
             assert compiled.cost_analysis() is not None
 
+    def test_pod_lossless_delta_state_carries_no_ref(self):
+        """The lossless delta config drops the reference from the pod train
+        state entirely — dryrun shape pin for the one-mechanism invariant."""
+        from repro.launch import inputs as I
+        from repro.launch.mesh import make_host_mesh
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        fed = FedConfig(strategy="fedadc", clients_per_round=2,
+                        local_steps=2, eta=0.05,
+                        downlink_compressor="delta")
+        run = RunConfig(remat="none")
+        with make_host_mesh() as mesh:
+            state_sds = I.state_inputs(mcfg, fed, run, mesh)
+            assert "refs" not in state_sds
+            assert "downlink_ref" not in state_sds
+
 
 # ---------------------------------------------------------------------------
-# DeltaDownlinkCodec unit level: per-direction knobs, reference lifecycle,
-# momentum-aware 0-byte ctx
+# unicast downlink (per-client catch-up resync): under full participation the
+# per-client classification degenerates to the multicast schedule — bytes AND
+# trajectory must match bit-for-bit on every engine (the CI engine-parity
+# matrix's Unicast axis); under partial participation the ReferenceStore's
+# catch-up/resync split is the new accounting
 # ---------------------------------------------------------------------------
+class TestUnicastTransportSync:
+    @pytest.mark.parametrize("codec", ["delta", "delta+identity"])
+    def test_full_participation_matches_multicast(self, data, codec):
+        x, y, xt, yt, parts = data
+        kw = dict(downlink_compressor=codec, clients_per_round=10,
+                  n_clients=10)
+        a = FederatedSimulator(_fed(**kw), _sim(), x, y, xt, yt, parts)
+        b = FederatedSimulator(_fed(downlink_unicast=True, **kw), _sim(),
+                               x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+        # round 0: every client is never-seen → full resync ≡ the multicast
+        # initial sync; later rounds: staleness 1 ≤ horizon → catch-up at
+        # exactly the multicast delta rate
+        assert b.downlink_bytes == a.downlink_bytes > 0
+        assert b.downlink_bytes_raw == a.downlink_bytes_raw
+        assert int(b.refs.resyncs) == 10
+        assert int(b.refs.catchups) == 10 * (b.sim.rounds - 1)
+
+    def test_partial_participation_catchup_accounting(self, data):
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(
+            _fed(downlink_compressor="delta", downlink_unicast=True,
+                 resync_horizon=100), _sim(6), x, y, xt, yt, parts)
+        s.run()
+        t = s.transport
+        # measured bytes are exactly the per-client ledger's sum, and every
+        # dispatch landed in exactly one class
+        assert s.downlink_bytes == sum(s.refs.client_bytes.values())
+        n_disp = 6 * s.fed.clients_per_round
+        n_resync, n_catchup = int(s.refs.resyncs), int(s.refs.catchups)
+        assert n_resync + n_catchup == n_disp   # sync never re-hits fresh
+        assert s.downlink_bytes == \
+            n_resync * t._down_raw + n_catchup * t._down_nbytes
+        assert s.downlink_bytes_raw == n_disp * t._down_raw
+        # horizon 0 forces a full resync on every revisit — strictly more
+        # bytes than the catch-up schedule for the same trajectory
+        h0 = FederatedSimulator(
+            _fed(downlink_compressor="delta", downlink_unicast=True,
+                 resync_horizon=0), _sim(6), x, y, xt, yt, parts)
+        h0.run()
+        _assert_trees_equal(s.params, h0.params, exact=True)
+        assert h0.downlink_bytes > s.downlink_bytes
+
+    def test_reference_pages_roundtrip(self, data):
+        """Each dispatched client's page in the store's "downlink_ref"
+        namespace holds the wire it was last handed — the engine can
+        re-serve a client's exact downlink without the global state."""
+        x, y, xt, yt, parts = data
+        s = FederatedSimulator(
+            _fed(downlink_compressor="delta", downlink_unicast=True),
+            _sim(), x, y, xt, yt, parts)
+        s.run()
+        last_v = s._rounds_done - 1
+        served = [c for c, v in s.refs._client_version.items() if v == last_v]
+        assert served, "someone was dispatched in the last round"
+        for c in served:
+            page = s.refs.client_reference(c)
+            _assert_trees_equal(page, s.refs._wire, exact=True)
+        # a client never dispatched has no page
+        never = set(range(s.n_clients)) - set(s.refs._client_version)
+        for c in never:
+            assert s.refs.client_reference(c) is None
+
+    def test_unicast_validation(self):
+        with pytest.raises(ValueError, match="lossless delta"):
+            Transport(_fed(downlink_compressor="identity",
+                           downlink_unicast=True))
+        with pytest.raises(ValueError, match="lossless delta"):
+            Transport(_fed(downlink_compressor="delta+qsgd",
+                           downlink_qsgd_bits=8, downlink_unicast=True))
+        with pytest.raises(ValueError, match="resync_horizon"):
+            Transport(_fed(downlink_compressor="delta",
+                           downlink_unicast=True, resync_horizon=-1))
+
+
+class TestUnicastTransportAsync:
+    def test_full_participation_matches_multicast(self, data):
+        """Unicast is an accounting layer: the trained trajectory is the
+        multicast one bit-for-bit, and with every client re-dispatched at
+        most once per version the measured bytes agree too."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig()
+        kw = dict(downlink_compressor="delta", clients_per_round=10,
+                  n_clients=10, buffer_k=10)
+        a = AsyncFederatedSimulator(_fed(**kw), _sim(), het, x, y, xt, yt,
+                                    parts)
+        b = AsyncFederatedSimulator(_fed(downlink_unicast=True, **kw),
+                                    _sim(), het, x, y, xt, yt, parts)
+        a.run(), b.run()
+        _assert_trees_equal(a.params, b.params, exact=True)
+        assert b.downlink_bytes == a.downlink_bytes > 0
+        assert b.downlink_bytes_raw == a.downlink_bytes_raw
+
+    def test_staleness_splits_catchup_resync(self, data):
+        """A straggling fleet under a tight horizon: fast clients ride the
+        cheap catch-up path, clients stale past the horizon pay the full
+        resync — both classes must actually occur and the measured bytes
+        must reproduce the split exactly."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, speed_dist="bimodal",
+                           straggler_frac=0.4, straggler_slowdown=8.0,
+                           seed=0)
+        s = AsyncFederatedSimulator(
+            _fed(downlink_compressor="delta", downlink_unicast=True,
+                 resync_horizon=1, buffer_k=1), _sim(8), het, x, y, xt, yt,
+            parts)
+        s.run()
+        t = s.transport
+        n_resync, n_catchup = int(s.refs.resyncs), int(s.refs.catchups)
+        assert n_resync > 0 and n_catchup > 0
+        n_disp = sum(1 for e in s.event_log if e[0] == "dispatch")
+        n_fresh = n_disp - n_resync - n_catchup
+        assert n_fresh >= 0
+        assert s.downlink_bytes == \
+            n_resync * t._down_raw + n_catchup * t._down_nbytes
+        assert s.downlink_bytes == sum(s.refs.client_bytes.values())
+
+    def test_bookkeeping_stays_bounded_over_long_runs(self, data):
+        """Dynamic counterpart of the unbounded-host-accumulator lint: the
+        unicast ledger is keyed per client, so arbitrarily many rounds hold
+        its size at O(n_clients) — no per-dispatch growth."""
+        x, y, xt, yt, parts = data
+        het = HeteroConfig(enabled=True, speed_dist="bimodal",
+                           straggler_frac=0.3, straggler_slowdown=4.0,
+                           seed=1)
+        s = AsyncFederatedSimulator(
+            _fed(downlink_compressor="delta", downlink_unicast=True,
+                 resync_horizon=2, buffer_k=1), _sim(4), het, x, y, xt, yt,
+            parts)
+        n = s.n_clients
+        sizes = []
+        for _ in range(3):          # repeated runs must not re-grow state
+            s.run(4)
+            for d in (s.refs._client_version, s.refs.client_bytes,
+                      s.refs.client_catchups, s.refs.client_resyncs):
+                assert len(d) <= n
+            sizes.append(len(s.refs._client_version))
+        n_disp = sum(1 for e in s.event_log if e[0] == "dispatch")
+        assert n_disp > n, "the bound must actually be exercised"
+        # the ledger only ever tracks the visited-client set — it grows
+        # toward the population, never with the dispatch count
+        assert sizes == sorted(sizes) and sizes[-1] <= n < n_disp
+
+
+class TestUnicastTransportPod:
+    def test_full_participation_matches_multicast(self):
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import init_state, make_train_step
+        mcfg = ARCHS["qwen3-4b"].reduced()
+        run = RunConfig(remat="none", param_dtype="float32",
+                        compute_dtype="float32")
+        rng = np.random.RandomState(0)
+        toks = rng.randint(0, mcfg.vocab_size, size=(1, 2, 2, 2, 32))
+        batch = {"tokens": jnp.asarray(toks, jnp.int32),
+                 "labels": jnp.asarray(toks, jnp.int32)}
+        kw = dict(strategy="fedadc", clients_per_round=2, local_steps=2,
+                  eta=0.05, downlink_compressor="delta", n_clients=2)
+        fed_m = FedConfig(**kw)
+        fed_u = FedConfig(downlink_unicast=True, **kw)
+        with make_host_mesh():
+            sm = init_state(jax.random.PRNGKey(0), mcfg, fed_m, run)
+            su = init_state(jax.random.PRNGKey(0), mcfg, fed_u, run)
+            step_m = make_train_step(mcfg, fed_m, run)
+            step_u = make_train_step(mcfg, fed_u, run)
+            ids = np.arange(2, dtype=np.int32)
+            for r in range(3):
+                sm, _ = step_m(sm, batch)
+                step_m.account_round(2, resync=(r == 0))
+                su, _ = step_u(su, batch)
+                step_u.account_round(client_ids=ids)
+            _assert_trees_equal(sm["params"], su["params"], exact=True)
+            tm, tu = step_m.transport, step_u.transport
+            assert tu.downlink_bytes == tm.downlink_bytes > 0
+            assert tu.downlink_bytes_raw == tm.downlink_bytes_raw
+            assert tu.uplink_bytes == tm.uplink_bytes
+            assert int(step_u.refs.resyncs) == 2
+            assert int(step_u.refs.catchups) == 4
+
+
+
 class TestDeltaDownlinkCodec:
     def test_per_direction_knobs_fall_back_to_uplink(self):
         t = _tree()
@@ -513,9 +740,20 @@ class TestDeltaDownlinkCodec:
         assert pw is p and ref is None
 
     def test_delta_requires_ref(self):
-        t = Transport(_fed(downlink_compressor="delta"))
-        with pytest.raises(ValueError, match="ref"):
-            t.broadcast(_tree(), {})
+        # only the *lossy* delta codec is stateful — its reconstruction
+        # drifts from θ_t, so the reference must be threaded in
+        t = Transport(_fed(downlink_compressor="delta+qsgd",
+                           downlink_qsgd_bits=8))
+        assert t.stateful_downlink
+        with pytest.raises(ValueError, match="stateful"):
+            t.broadcast(_tree(), {}, jax.random.PRNGKey(0))
+        # the lossless delta derives its reference from θ_t itself:
+        # ref=None is the stateless form every engine now uses
+        t2 = Transport(_fed(downlink_compressor="delta"))
+        assert t2.needs_downlink_ref and not t2.stateful_downlink
+        p = _tree()
+        pw, cw, _ = t2.broadcast(p, {})
+        _assert_trees_equal(pw, p, exact=True)
 
 
 # ---------------------------------------------------------------------------
